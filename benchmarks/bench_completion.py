@@ -1,0 +1,88 @@
+"""Paper Fig. 5 + Table III: job completion time per scheme under stragglers.
+
+Protocol (Section V): N workers, s of them slowed by a background load;
+master collects until decodable, then decodes.  Compute time is event-driven
+simulation charged from each scheme's per-worker cost factor; decode time is
+measured for real on actual sparse blocks.  Data = the paper's square / tall
+/ fat random sparse matrices, dimension-scaled to the CPU budget (density
+regime preserved; see repro.configs.sparse_code_demo).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, sparse_bernoulli
+from repro.configs.sparse_code_demo import BENCH_FAT, BENCH_SQUARE, BENCH_TALL
+from repro.core import schemes
+from repro.core.decoder import DecodingError
+from repro.core.encoder import split_blocks, compute_block_products
+from repro.runtime import SlowWorkers, run_coded_job
+
+SCHEME_ORDER = ["uncoded", "lt_code", "sparse_mds", "product", "polynomial",
+                "sparse_code", "sparse_code_opt"]
+
+# the paper's experiments use the LP-optimized degree distribution (model
+# (46) / Table IV) at these small mn -- that is the headline row; the wave
+# soliton row shows the asymptotic design's constant.
+CTORS = dict(schemes.SCHEMES)
+CTORS["sparse_code_opt"] = lambda m, n, N, seed=0: schemes.sparse_code(
+    m, n, N, distribution="optimized", seed=seed)
+
+
+def _make_blocks(exp, rng):
+    A = sparse_bernoulli(rng, exp.s, exp.r - exp.r % exp.m, exp.nnz_a)
+    B = sparse_bernoulli(rng, exp.s, exp.t - exp.t % exp.n, exp.nnz_b)
+    A_blocks = split_blocks(A, exp.m)
+    B_blocks = split_blocks(B, exp.n)
+    prods = compute_block_products(A_blocks, B_blocks)
+    return [prods[i][j] for i in range(exp.m) for j in range(exp.n)]
+
+
+def run(quick: bool = True):
+    """Reproduction note (EXPERIMENTS.md): coded schemes beat uncoded only
+    when the straggler slowdown exceeds the coded scheme's effective degree
+    (~3-5 for the sparse code at mn=16).  The paper's background-load
+    stragglers are severe (uncoded/sparse ~ 3x in Table III); we report a
+    moderate (5x) and a severe (10x) regime."""
+    rows = []
+    datasets = [("square", BENCH_SQUARE), ("tall", BENCH_TALL), ("fat", BENCH_FAT)]
+    trials = 3 if quick else 20
+    slowdowns = (5.0, 10.0)
+    for dname, exp in [d for d in datasets]:
+        rng = np.random.default_rng(7)
+        blocks = _make_blocks(exp, rng)
+        m, n, N = exp.m, exp.n, exp.num_workers + 12
+        for slow in slowdowns:
+            _bench_one(rows, f"{dname}/slow{slow:g}x", blocks, m, n, N,
+                       SlowWorkers(num_slow=exp.num_stragglers, slowdown=slow),
+                       trials)
+    return rows
+
+
+def _bench_one(rows, dname, blocks, m, n, N, strag, trials):
+        for sname in SCHEME_ORDER:
+            ctor = CTORS[sname]
+            totals, decodes, waited, failed = [], [], [], 0
+            for t in range(trials):
+                code = ctor(m, n) if sname == "uncoded" else ctor(m, n, N, seed=t)
+                try:
+                    rep = run_coded_job(code, blocks, strag,
+                                        rng=np.random.default_rng(100 + t),
+                                        unit_block_time=0.05)
+                except DecodingError:
+                    failed += 1  # LT peeling can stall even with all workers
+                    continue
+                totals.append(rep.total_time)
+                decodes.append(rep.decode_wall_time)
+                waited.append(rep.workers_used)
+            if not totals:
+                rows.append(Row(f"tableIII/{dname}/{sname}", 0.0,
+                                f"UNDECODABLE in {failed}/{trials} trials"))
+                continue
+            note = f" failed={failed}/{trials}" if failed else ""
+            rows.append(Row(
+                f"tableIII/{dname}/{sname}", float(np.mean(totals)) * 1e6,
+                f"total={np.mean(totals):.4f}s decode={np.mean(decodes):.4f}s "
+                f"workers={np.mean(waited):.1f}/"
+                f"{N if sname != 'uncoded' else m*n}{note}"))

@@ -1,0 +1,40 @@
+"""Shared helpers for the benchmark suite."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import scipy.sparse as sp
+
+
+def sparse_bernoulli(rng, rows, cols, nnz):
+    """Random sparse matrix with ~nnz nonzero +-1/values entries (the paper's
+    random Bernoulli construction, dimension-scaled)."""
+    density = min(1.0, nnz / (rows * cols))
+    return sp.random(rows, cols, density=density, format="csc",
+                     random_state=np.random.RandomState(rng.integers(2**31)),
+                     data_rvs=lambda n: rng.integers(1, 5, n).astype(np.float64))
+
+
+def timeit(fn, repeats=3, warmup=1):
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+class Row:
+    """One CSV row: name, us_per_call, derived."""
+
+    def __init__(self, name: str, us: float, derived: str = ""):
+        self.name = name
+        self.us = us
+        self.derived = derived
+
+    def __str__(self):
+        return f"{self.name},{self.us:.1f},{self.derived}"

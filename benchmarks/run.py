@@ -1,0 +1,55 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  python -m benchmarks.run [--full] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows.  --full uses the larger
+configurations (slower, closer to the paper's dimensions).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (
+    bench_completion,
+    bench_components,
+    bench_coded_matmul,
+    bench_decode,
+    bench_density,
+    bench_recovery,
+)
+
+SUITES = {
+    "density": bench_density,        # Fig 1(b)
+    "recovery": bench_recovery,      # Fig 4 / Table IV
+    "completion": bench_completion,  # Fig 5 / Table III
+    "components": bench_components,  # Fig 6
+    "decode": bench_decode,          # Theorem 1
+    "coded_matmul": bench_coded_matmul,  # SPMD integration
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None, choices=list(SUITES))
+    args = ap.parse_args(argv)
+
+    names = [args.only] if args.only else list(SUITES)
+    print("name,us_per_call,derived")
+    for name in names:
+        t0 = time.time()
+        try:
+            rows = SUITES[name].run(quick=not args.full)
+        except Exception as e:  # noqa: BLE001 -- keep the suite going
+            print(f"{name}/SUITE_ERROR,0.0,{type(e).__name__}: {e}")
+            continue
+        for row in rows:
+            print(row)
+        print(f"# {name} finished in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

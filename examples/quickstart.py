@@ -1,0 +1,62 @@
+"""Quickstart: the sparse code end to end in 60 seconds.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+1. builds a sparse C = A^T B problem, splits it into m x n = 2 x 3 blocks,
+2. codes it across N = 12 workers with the Wave Soliton (P, S)-sparse code,
+3. declares two workers stragglers and never waits for them,
+4. decodes with the hybrid peeling + rooting decoder (Algorithm 1),
+5. checks the result against the direct product.
+"""
+
+import numpy as np
+import scipy.sparse as sp
+
+from repro.core import (
+    SparseCodeSpec, generate_coefficient_matrix, make_tasks, encode_blocks,
+    hybrid_decode,
+)
+from repro.core.encoder import split_blocks
+
+
+def main():
+    rng = np.random.default_rng(0)
+    m, n, N = 2, 3, 12
+    s, r, t = 4000, 1800, 2400
+    A = sp.random(s, r, density=0.01, format="csc",
+                  random_state=np.random.RandomState(0))
+    B = sp.random(s, t, density=0.01, format="csc",
+                  random_state=np.random.RandomState(1))
+    print(f"A: {A.shape} nnz={A.nnz}   B: {B.shape} nnz={B.nnz}")
+
+    spec = SparseCodeSpec(m=m, n=n, num_workers=N, distribution="wave_soliton")
+    M = generate_coefficient_matrix(spec)
+    tasks = make_tasks(M)
+    print(f"coefficient matrix: {M.shape}, avg degree "
+          f"{M.nnz / N:.2f} (Theta(ln mn) -- the paper's overhead)")
+
+    A_blocks, B_blocks = split_blocks(A, m), split_blocks(B, n)
+    results = [encode_blocks(t_, A_blocks, B_blocks, n) for t_ in tasks]
+
+    stragglers = {3, 7}
+    finished = [k for k in range(N) if k not in stragglers]
+    print(f"workers {sorted(stragglers)} are stragglers -> decoding from "
+          f"{len(finished)} results")
+
+    blocks, stats = hybrid_decode(M[finished], [results[k] for k in finished])
+    print(f"decode: {stats.peels} peels, {stats.roots} rooting steps, "
+          f"{stats.axpys} sparse AXPYs")
+
+    C = (A.T @ B).toarray()
+    br, bt = r // m, t // n
+    err = max(
+        abs(blocks[i * n + j] - C[i*br:(i+1)*br, j*bt:(j+1)*bt]).max()
+        for i in range(m) for j in range(n)
+    )
+    print(f"max abs error vs direct product: {err:.2e}")
+    assert err < 1e-8
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

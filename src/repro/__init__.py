@@ -1,0 +1,15 @@
+"""repro: Coded Sparse Matrix Multiplication (Wang, Liu, Shroff 2018) as a
+production-grade JAX training/inference framework.
+
+Layers:
+  repro.core      -- the paper's sparse code (degree design, encoder, hybrid decoder)
+  repro.sparse    -- block-sparse substrate (host + JAX)
+  repro.runtime   -- master/worker execution with straggler injection
+  repro.models    -- 10 assigned LM architectures (dense/GQA/MoE/SSM/hybrid/enc-dec/VLM)
+  repro.training  -- optimizer, train_step, data, coded checkpointing, compression
+  repro.serving   -- KV cache, prefill/decode steps
+  repro.kernels   -- Pallas TPU kernels (block-sparse SpMM, fused coded accumulation)
+  repro.launch    -- production mesh, multi-pod dry-run, roofline, train/serve drivers
+"""
+
+__version__ = "1.0.0"

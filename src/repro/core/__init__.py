@@ -1,0 +1,28 @@
+"""The paper's contribution: (P, S)-sparse codes for distributed matmul."""
+
+from repro.core.degree import (
+    wave_soliton,
+    robust_soliton,
+    ideal_soliton,
+    optimized_distribution,
+    sample_degrees,
+    average_degree,
+)
+from repro.core.encoder import (
+    SparseCodeSpec,
+    CodedTask,
+    generate_coefficient_matrix,
+    make_tasks,
+    encode_blocks,
+    block_col,
+    col_block,
+)
+from repro.core.decoder import (
+    DecodeStats,
+    peel_schedule,
+    hybrid_decode,
+    gaussian_decode,
+    apply_schedule,
+)
+from repro.core.matching import perfect_matching_prob, degree_evolution
+from repro.core.lp_design import optimize_degree_distribution

@@ -1,0 +1,199 @@
+"""Coded distributed matmul as a JAX/shard_map primitive.
+
+Maps the paper's master/worker protocol onto an SPMD mesh axis:
+
+* worker k  = device k on the ``workers`` mesh axis (N devices);
+* its task  = row k of the coefficient matrix M (sampled on host, static);
+* local compute = sum_{l} w_kl * A_{i_l}^T B_{j_l}, evaluated as a
+  lax.scan over the (padded) task slots -- exactly `degree` block products;
+* decode    = blocks = D @ C~  with D = pinv(M) precomputed on host, executed
+  as one psum over the axis (decoding a full-rank linear code is linear, so
+  on-device it collapses to a single fused contraction; the peeling/rooting
+  schedule is the *host* decode used by the runtime layer).
+
+TPU adaptation notes (DESIGN.md section 3):
+  - SPMD lockstep means every device pays for the *maximum* degree in the
+    batch, not its own degree.  The distribution is therefore truncated at
+    ``max_degree`` (default ~ 2 ln(mn), preserving decodability -- validated
+    empirically in tests) and every device runs exactly max_degree padded
+    slots (zero weights contribute nothing numerically).
+  - Fault tolerance: ``survivors`` masks dead/straggling devices; the decode
+    matrix is re-derived from the surviving rows on host (any full-rank K
+    subset suffices -- Theorem 2), and dead devices' contributions are zeroed
+    on device.  This is the any-K-of-N property that lets a multi-pod step
+    tolerate a lost pod without recompute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import scipy.sparse as sp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.decoder import decode_matrix
+from repro.core.encoder import SparseCodeSpec, generate_coefficient_matrix
+
+
+@dataclasses.dataclass(frozen=True)
+class CodedMatmulPlan:
+    """Host-side static plan: tasks + decode matrix, ready to stage to device."""
+
+    spec: SparseCodeSpec
+    cols: np.ndarray      # (N, Lmax) int32 block ids, padded with 0
+    weights: np.ndarray   # (N, Lmax) f32, padded with 0.0
+    decode: np.ndarray    # (mn, N) f32: D s.t. blocks = D @ C~
+    max_degree: int
+
+    @property
+    def m(self) -> int:
+        return self.spec.m
+
+    @property
+    def n(self) -> int:
+        return self.spec.n
+
+    @property
+    def num_workers(self) -> int:
+        return self.spec.num_workers
+
+    def with_survivors(self, survivors: np.ndarray) -> "CodedMatmulPlan":
+        """Re-derive the decode matrix using only surviving workers' rows.
+
+        survivors: boolean mask (N,).  Requires the surviving submatrix to be
+        full column rank (Theorem 2 says w.h.p. it is once >= ~mn survive).
+        """
+        M = np.zeros((self.num_workers, self.m * self.n))
+        for k in range(self.num_workers):
+            for l in range(self.max_degree):
+                if self.weights[k, l] != 0.0:
+                    M[k, self.cols[k, l]] += self.weights[k, l]
+        M_surv = M * survivors[:, None]
+        if np.linalg.matrix_rank(M_surv) < self.m * self.n:
+            raise ValueError(
+                f"only {int(survivors.sum())}/{self.num_workers} survivors; "
+                "coefficient matrix lost full rank -- cannot decode")
+        D = np.linalg.pinv(M_surv)
+        return dataclasses.replace(self, decode=D.astype(np.float32))
+
+
+def make_plan(
+    m: int,
+    n: int,
+    num_workers: int,
+    distribution: str = "wave_soliton",
+    weight_kind: str = "symmetric",
+    max_degree: int | None = None,
+    seed: int = 0,
+    max_resample: int = 50,
+) -> CodedMatmulPlan:
+    """Sample a (P,S)-sparse code and build the SPMD plan.
+
+    The degree distribution is truncated at max_degree (lockstep SPMD pays for
+    the max anyway); resamples until M is full rank (Theorem 2: succeeds
+    immediately w.h.p.).
+    """
+    d = m * n
+    max_degree = max_degree or max(1, min(d, int(np.ceil(2 * np.log(max(d, 2)) + 1))))
+    for attempt in range(max_resample):
+        spec = SparseCodeSpec(m=m, n=n, num_workers=num_workers,
+                              distribution=distribution,
+                              weight_kind=weight_kind, seed=seed + attempt)
+        M = generate_coefficient_matrix(spec)
+        # truncate: rows with degree > max_degree keep their first max_degree
+        cols = np.zeros((num_workers, max_degree), dtype=np.int32)
+        weights = np.zeros((num_workers, max_degree), dtype=np.float32)
+        Mt = sp.lil_matrix((num_workers, d))
+        for k in range(num_workers):
+            lo, hi = M.indptr[k], M.indptr[k + 1]
+            take = min(hi - lo, max_degree)
+            cs = M.indices[lo:lo + take]
+            ws = M.data[lo:lo + take]
+            cols[k, :take] = cs
+            weights[k, :take] = ws
+            Mt[k, cs] = ws
+        Mt = Mt.tocsr()
+        if np.linalg.matrix_rank(Mt.toarray()) >= d:
+            D = decode_matrix(Mt).astype(np.float32)
+            return CodedMatmulPlan(spec=spec, cols=cols, weights=weights,
+                                   decode=D, max_degree=max_degree)
+    raise RuntimeError(f"no full-rank coefficient matrix after {max_resample} tries")
+
+
+def _local_coded_product(A, B, cols_k, w_k, m: int, n: int):
+    """One worker's combination: sum_l w_l A_{i_l}^T B_{j_l} (scan over slots)."""
+    s, r = A.shape
+    _, t = B.shape
+    br, bt = r // m, t // n
+
+    def body(acc, slot):
+        col, w = slot
+        i = col // n
+        j = col % n
+        Ai = jax.lax.dynamic_slice(A, (0, i * br), (s, br))
+        Bj = jax.lax.dynamic_slice(B, (0, j * bt), (s, bt))
+        prod = jnp.einsum("sr,st->rt", Ai, Bj,
+                          preferred_element_type=jnp.float32)
+        return acc + w.astype(jnp.float32) * prod, None
+
+    acc0 = jnp.zeros((br, bt), jnp.float32)
+    acc, _ = jax.lax.scan(body, acc0, (cols_k, w_k))
+    return acc
+
+
+def coded_matmul(
+    A: jax.Array,
+    B: jax.Array,
+    plan: CodedMatmulPlan,
+    mesh: jax.sharding.Mesh,
+    axis_name: str = "model",
+    survivors: np.ndarray | None = None,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """C = A^T B computed with the (P,S)-sparse code over a mesh axis.
+
+    A: (s, r), B: (s, t), replicated over `axis_name` (the worker axis).
+    Returns C (r, t) replicated.  r % m == 0, t % n == 0 required, and the
+    mesh axis size must equal plan.num_workers.
+    """
+    N = mesh.shape[axis_name]
+    if N != plan.num_workers:
+        raise ValueError(f"mesh axis {axis_name}={N} != plan workers {plan.num_workers}")
+    if survivors is not None:
+        plan = plan.with_survivors(np.asarray(survivors, dtype=bool))
+        alive = jnp.asarray(survivors, dtype=jnp.float32)
+    else:
+        alive = jnp.ones((N,), jnp.float32)
+
+    m, n = plan.m, plan.n
+    cols_t = jnp.asarray(plan.cols)        # (N, L)
+    w_t = jnp.asarray(plan.weights)        # (N, L)
+    D_t = jnp.asarray(plan.decode)         # (mn, N)
+
+    def worker_fn(A_, B_):
+        k = jax.lax.axis_index(axis_name)
+        Ct = _local_coded_product(A_, B_, cols_t[k], w_t[k], m, n)
+        # decode contribution: blocks_c += D[c, k] * C~_k  (zeroed if dead)
+        contrib = (D_t[:, k] * alive[k])[:, None, None] * Ct[None]
+        blocks = jax.lax.psum(contrib, axis_name)          # (mn, br, bt)
+        br, bt = Ct.shape
+        C = blocks.reshape(m, n, br, bt).transpose(0, 2, 1, 3).reshape(m * br, n * bt)
+        return C.astype(out_dtype)
+
+    other_axes = tuple(a for a in mesh.axis_names if a != axis_name)
+    fn = jax.shard_map(
+        worker_fn, mesh=mesh,
+        in_specs=(P(), P()),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return fn(A, B)
+
+
+def uncoded_matmul_reference(A, B):
+    """The plain product, for tests and overhead comparisons."""
+    return jnp.einsum("sr,st->rt", A, B, preferred_element_type=jnp.float32)

@@ -1,0 +1,234 @@
+"""Hybrid peeling + rooting decoder (paper Algorithm 1, Lemma 1).
+
+The decoder is expressed in two phases:
+
+1. ``peel_schedule(M)`` -- *structural* decoding.  The peel/root order depends
+   only on the coefficient matrix M, never on the data blocks.  We therefore
+   run Algorithm 1 once over M's sparsity pattern and emit a static schedule
+   of ops:
+
+     ("peel", row, col, scale)          block[col] = scale * R[row]
+     ("root", col, rows, coeffs)        block[col] = sum_r coeffs * R[rows]
+     ("axpy", row, col, weight)         R[row] -= weight * block[col]
+
+2. ``apply_schedule(schedule, results)`` -- replays the schedule on the data.
+   Each op is a sparse AXPY costing O(nnz(block)), so total decode cost is
+   O(#axpys * nnz-per-block) = O(nnz(C) * ln(mn)) under Wave Soliton -- the
+   paper's Theorem 1.  Blocks may be numpy arrays or scipy.sparse matrices.
+
+This split is also the TPU adaptation (DESIGN.md section 3): the schedule is
+computed on the host master; on device the whole decode collapses to a small
+linear combine ``blocks = D @ results`` with D = pinv(M) (``decode_matrix``),
+because decoding any full-rank linear code is itself linear.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import scipy.sparse as sp
+
+
+class DecodingError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class DecodeStats:
+    peels: int = 0
+    roots: int = 0
+    axpys: int = 0
+    root_row_combines: int = 0  # rows combined across all rooting steps
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _adjacency(M: sp.spmatrix):
+    """Row->cols / col->rows adjacency with weights, as mutable dicts."""
+    Mc = sp.coo_matrix(M)
+    row_cols: list[dict[int, float]] = [dict() for _ in range(M.shape[0])]
+    col_rows: list[set[int]] = [set() for _ in range(M.shape[1])]
+    for r, c, v in zip(Mc.row, Mc.col, Mc.data):
+        if v == 0.0:
+            continue
+        row_cols[r][int(c)] = float(v)
+        col_rows[int(c)].add(int(r))
+    return row_cols, col_rows
+
+
+def peel_schedule(
+    M: sp.spmatrix | np.ndarray,
+    rng: np.random.Generator | None = None,
+    root_pick: str = "random",
+    check_rank: bool = True,
+):
+    """Run Algorithm 1 structurally over M; return (schedule, stats).
+
+    root_pick:
+      "random"    -- paper's choice: uniformly random unrecovered block.
+      "max_rows"  -- beyond-paper heuristic: pick the unrecovered block that
+                     appears in the most active rows, maximizing the expected
+                     number of new ripples per rooting step (see EXPERIMENTS.md
+                     section Perf for the measured effect).
+      "fail"      -- raise DecodingError instead of rooting (pure peeling,
+                     i.e. LT-code decoding semantics).
+    """
+    M = sp.csr_matrix(M)
+    K, d = M.shape
+    if check_rank:
+        dense = M.toarray()
+        if np.linalg.matrix_rank(dense) < d:
+            raise DecodingError(
+                f"coefficient matrix rank {np.linalg.matrix_rank(dense)} < {d}; "
+                "collect more results before decoding"
+            )
+    rng = rng or np.random.default_rng(0)
+    row_cols, col_rows = _adjacency(M)
+    recovered = np.zeros(d, dtype=bool)
+    schedule: list[tuple] = []
+    stats = DecodeStats()
+
+    # Ripple set: rows whose residual degree is exactly 1.
+    ripples = {r for r in range(K) if len(row_cols[r]) == 1}
+
+    def subtract_block(col: int):
+        """AXPY the recovered block out of every active row containing it."""
+        for r in sorted(col_rows[col]):
+            w = row_cols[r].pop(col)
+            schedule.append(("axpy", r, col, w))
+            stats.axpys += 1
+            if len(row_cols[r]) == 1:
+                ripples.add(r)
+            elif len(row_cols[r]) == 0:
+                ripples.discard(r)
+        col_rows[col].clear()
+
+    num_left = d
+    while num_left > 0:
+        ripple_row = None
+        while ripples:
+            r = ripples.pop()
+            if len(row_cols[r]) == 1:
+                ripple_row = r
+                break
+        if ripple_row is not None:
+            (col, w), = row_cols[ripple_row].items()
+            row_cols[ripple_row].clear()
+            col_rows[col].discard(ripple_row)
+            schedule.append(("peel", ripple_row, col, 1.0 / w))
+            stats.peels += 1
+            recovered[col] = True
+            num_left -= 1
+            subtract_block(col)
+            continue
+
+        # Rooting step (Lemma 1): no ripple exists.  Solve the residual
+        # system restricted to unrecovered columns for a combination that
+        # isolates block `col`.
+        if root_pick == "fail":
+            raise DecodingError("peeling stalled and rooting disabled")
+        unrec = np.flatnonzero(~recovered)
+        if root_pick == "max_rows":
+            col = int(unrec[np.argmax([len(col_rows[c]) for c in unrec])])
+        else:
+            col = int(rng.choice(unrec))
+        active_rows = sorted({r for c in unrec for r in col_rows[c]})
+        if not active_rows:
+            raise DecodingError("no active rows left but blocks unrecovered")
+        R = np.zeros((len(active_rows), len(unrec)))
+        for a, r in enumerate(active_rows):
+            for c, w in row_cols[r].items():
+                R[a, unrec.searchsorted(c)] = w
+        e = np.zeros(len(unrec))
+        e[unrec.searchsorted(col)] = 1.0
+        # Solve R^T u = e  (least squares; consistent because M is full rank).
+        u, residual, rank, _ = np.linalg.lstsq(R.T, e, rcond=None)
+        if not np.allclose(R.T @ u, e, atol=1e-8):
+            raise DecodingError("rooting solve failed; matrix not full rank?")
+        nz = np.flatnonzero(np.abs(u) > 1e-12)
+        rows = np.asarray([active_rows[i] for i in nz], dtype=np.int64)
+        coeffs = u[nz]
+        schedule.append(("root", col, rows, coeffs))
+        stats.roots += 1
+        stats.root_row_combines += len(rows)
+        recovered[col] = True
+        num_left -= 1
+        subtract_block(col)
+
+    return schedule, stats
+
+
+def apply_schedule(schedule, results):
+    """Replay a structural schedule on worker results.
+
+    ``results``: list of blocks (numpy arrays or scipy sparse) indexed by row.
+    Returns the list of mn recovered blocks indexed by flat column.
+    Rows are consumed destructively on a shallow copy.
+    """
+    R = list(results)
+    d = 1 + max(
+        op[2] if op[0] != "root" else op[1] for op in schedule
+    ) if schedule else 0
+    blocks = [None] * d
+    for op in schedule:
+        kind = op[0]
+        if kind == "peel":
+            _, row, col, scale = op
+            blocks[col] = R[row] * scale
+        elif kind == "root":
+            _, col, rows, coeffs = op
+            acc = R[rows[0]] * coeffs[0]
+            for r, u in zip(rows[1:], coeffs[1:]):
+                acc = acc + R[r] * u
+            blocks[col] = acc
+        elif kind == "axpy":
+            _, row, col, w = op
+            R[row] = R[row] - blocks[col] * w
+        else:  # pragma: no cover
+            raise ValueError(f"unknown op {kind}")
+    return blocks
+
+
+def hybrid_decode(M, results, rng=None, root_pick: str = "random"):
+    """Algorithm 1 end to end: schedule + replay.  Returns (blocks, stats)."""
+    schedule, stats = peel_schedule(M, rng=rng, root_pick=root_pick)
+    return apply_schedule(schedule, results), stats
+
+
+def gaussian_decode(M, results):
+    """Reference decoder: solve the full linear system with least squares.
+
+    O(K * mn^2 + mn * rt) -- the dense path the paper's hybrid decoder beats.
+    Used as the test oracle and as the decode path for dense baseline codes.
+    """
+    M = sp.csr_matrix(M).toarray()
+    K, d = M.shape
+    if np.linalg.matrix_rank(M) < d:
+        raise DecodingError("coefficient matrix not full column rank")
+    first = next(b for b in results if b is not None)
+    # pinv(M) is (d x K) and tiny; applying it block-by-block avoids lstsq's
+    # many-RHS pathology and preserves sparsity when the blocks are sparse.
+    D = np.linalg.pinv(M)
+    D[np.abs(D) < 1e-12] = 0.0
+    out = []
+    for c in range(d):
+        acc = None
+        for k in range(K):
+            if D[c, k] != 0.0:
+                term = results[k] * D[c, k]
+                acc = term if acc is None else acc + term
+        out.append(acc if acc is not None else first * 0.0)
+    return out
+
+
+def decode_matrix(M: sp.spmatrix | np.ndarray) -> np.ndarray:
+    """D = M^+ in R^{mn x K}: decoding as a single linear combine.
+
+    This is the TPU-idiomatic decode: ``blocks = einsum('ck,k...->c...', D,
+    results)`` runs on the MXU in one fused contraction.  Mathematically
+    identical to Algorithm 1's output (both invert the same full-rank system).
+    """
+    M = sp.csr_matrix(M).toarray()
+    return np.linalg.pinv(M)

@@ -1,0 +1,156 @@
+"""Encoder for the (P, S)-sparse code (paper Definition 1).
+
+Block convention: A is split into m column blocks, B into n column blocks;
+block (i, j) of C = A^T B is C_ij = A_i^T B_j and maps to flat column index
+``col = i * n + j`` of the coefficient matrix M in R^{N x mn}.
+
+Worker k's task is the weighted combination  C~_k = sum_{(i,j)} w^k_ij C_ij
+with the number of nonzero weights drawn from a degree distribution P and the
+nonzero weight values drawn i.i.d. uniform from the finite set S (paper uses
+S = [m^2 n^2]; we default to that and also offer numerically friendlier sets).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+import scipy.sparse as sp
+
+from repro.core import degree as degree_lib
+
+
+def block_col(i: int, j: int, n: int) -> int:
+    return i * n + j
+
+
+def col_block(col: int, n: int) -> tuple[int, int]:
+    return col // n, col % n
+
+
+def make_weight_set(m: int, n: int, kind: str = "paper") -> np.ndarray:
+    """The finite set S from which nonzero weights are drawn.
+
+    kind="paper":       S = {1, ..., m^2 n^2}  (Definition 1)
+    kind="symmetric":   S = {±1, ..., ±ceil(m^2n^2/2)}  (better f32 conditioning,
+                        same Schwartz-Zippel guarantee: |S| >= (mn)^2 = deg(det)^2)
+    kind="unit":        S = {+1, -1} (binary-ish; NOT S-Z safe, for ablations)
+    """
+    d2 = (m * n) ** 2
+    if kind == "paper":
+        return np.arange(1, d2 + 1, dtype=np.float64)
+    if kind == "symmetric":
+        half = (d2 + 1) // 2
+        vals = np.arange(1, half + 1, dtype=np.float64)
+        return np.concatenate([vals, -vals])
+    if kind == "unit":
+        return np.array([1.0, -1.0])
+    raise ValueError(f"unknown weight set kind {kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseCodeSpec:
+    """Static description of a (P, S)-sparse code instance."""
+
+    m: int
+    n: int
+    num_workers: int
+    distribution: str = "wave_soliton"
+    weight_kind: str = "paper"
+    seed: int = 0
+
+    @property
+    def mn(self) -> int:
+        return self.m * self.n
+
+    def degree_probs(self) -> np.ndarray:
+        return degree_lib.get_distribution(self.distribution, self.mn)
+
+
+@dataclasses.dataclass(frozen=True)
+class CodedTask:
+    """One worker's assignment: which blocks, with which weights."""
+
+    worker: int
+    cols: np.ndarray     # flat block indices, shape (degree,)
+    weights: np.ndarray  # same shape
+
+    @property
+    def degree(self) -> int:
+        return len(self.cols)
+
+    def pairs(self, n: int) -> list[tuple[int, int, float]]:
+        return [(c // n, c % n, float(w)) for c, w in zip(self.cols, self.weights)]
+
+
+def generate_coefficient_matrix(
+    spec: SparseCodeSpec, rng: np.random.Generator | None = None
+) -> sp.csr_matrix:
+    """Sample the coefficient matrix M in R^{N x mn} per Definition 1."""
+    rng = rng or np.random.default_rng(spec.seed)
+    d = spec.mn
+    probs = spec.degree_probs()
+    S = make_weight_set(spec.m, spec.n, spec.weight_kind)
+    degrees = degree_lib.sample_degrees(rng, probs, spec.num_workers)
+    rows, cols, vals = [], [], []
+    for k in range(spec.num_workers):
+        deg = int(degrees[k])
+        chosen = rng.choice(d, size=deg, replace=False)
+        w = rng.choice(S, size=deg)
+        rows.extend([k] * deg)
+        cols.extend(chosen.tolist())
+        vals.extend(w.tolist())
+    M = sp.csr_matrix(
+        (np.asarray(vals, dtype=np.float64), (rows, cols)),
+        shape=(spec.num_workers, d),
+    )
+    return M
+
+
+def make_tasks(M: sp.csr_matrix) -> list[CodedTask]:
+    """Turn rows of the coefficient matrix into per-worker tasks."""
+    tasks = []
+    for k in range(M.shape[0]):
+        lo, hi = M.indptr[k], M.indptr[k + 1]
+        tasks.append(
+            CodedTask(worker=k, cols=M.indices[lo:hi].copy(), weights=M.data[lo:hi].copy())
+        )
+    return tasks
+
+
+def split_blocks(X: np.ndarray | sp.spmatrix, parts: int, axis: int = 1) -> list:
+    """Evenly split a matrix into `parts` blocks along `axis` (pads nothing;
+    requires divisibility, as in the paper's setup)."""
+    size = X.shape[axis]
+    if size % parts:
+        raise ValueError(f"dimension {size} not divisible into {parts} blocks")
+    step = size // parts
+    out = []
+    for p in range(parts):
+        sl = slice(p * step, (p + 1) * step)
+        out.append(X[:, sl] if axis == 1 else X[sl, :])
+    return out
+
+
+def compute_block_products(
+    A_blocks: Sequence, B_blocks: Sequence
+) -> list[list]:
+    """All mn uncoded block products C_ij = A_i^T B_j (oracle/test helper)."""
+    return [[(Ai.T @ Bj) for Bj in B_blocks] for Ai in A_blocks]
+
+
+def encode_blocks(task: CodedTask, A_blocks: Sequence, B_blocks: Sequence, n: int):
+    """Execute one coded task: C~ = sum w_ij A_i^T B_j.
+
+    Works for numpy arrays and scipy.sparse matrices alike.  The sum is
+    evaluated product-by-product (the combination does not factorize), which
+    is exactly why the paper's per-worker overhead is `degree x` one block
+    product, i.e. Theta(ln(mn)) on average under Wave Soliton.
+    """
+    acc = None
+    for c, w in zip(task.cols, task.weights):
+        i, j = c // n, c % n
+        term = (A_blocks[i].T @ B_blocks[j]) * w
+        acc = term if acc is None else acc + term
+    return acc

@@ -1,0 +1,244 @@
+"""Baseline coded-computation schemes the paper benchmarks against.
+
+Every scheme is expressed in the *block domain*: the mn block products
+C_ij = A_i^T B_j are the unknowns, a worker's results are rows of a generator
+matrix M applied to them.  This uniform view supports the completion-time and
+decode-time benchmarks (Figs. 5-6, Table III).
+
+Per-worker local cost is reported as a *cost factor*: local compute relative
+to one uncoded block product on the same (sparse) inputs.  For sum-of-products
+codes (sparse code, LT, sparse MDS) it equals the row degree -- the worker
+evaluates each A_i^T B_j separately.  For product-of-coded-matrices codes
+(polynomial, MDS, product code) the coded inputs densify m- and n-fold, so the
+single product costs ~m*n uncoded block products (paper Fig. 1, Table I).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import scipy.sparse as sp
+
+from repro.core import degree as degree_lib
+from repro.core.decoder import (
+    DecodingError,
+    gaussian_decode,
+    hybrid_decode,
+    peel_schedule,
+    apply_schedule,
+)
+from repro.core.encoder import SparseCodeSpec, generate_coefficient_matrix
+
+
+@dataclasses.dataclass
+class CodeInstance:
+    """A realized code: worker -> generator rows, costs, decode policy."""
+
+    name: str
+    M: sp.csr_matrix                 # (R, mn) generator in the block domain
+    worker_rows: list[list[int]]     # worker k owns these rows of M
+    cost_factor: np.ndarray          # (N,) local compute vs one block product
+    decode_kind: str                 # "hybrid" | "peel" | "dense"
+
+    @property
+    def num_workers(self) -> int:
+        return len(self.worker_rows)
+
+    @property
+    def mn(self) -> int:
+        return self.M.shape[1]
+
+    def rows_of(self, workers: list[int]) -> list[int]:
+        return [r for w in workers for r in self.worker_rows[w]]
+
+    def can_decode(self, workers: list[int]) -> bool:
+        rows = self.rows_of(workers)
+        if len(rows) < self.mn:
+            return False
+        sub = self.M[rows]
+        if self.decode_kind == "peel":
+            try:
+                peel_schedule(sub, check_rank=False, root_pick="fail")
+                return True
+            except (DecodingError, ValueError):
+                return False
+        return np.linalg.matrix_rank(sub.toarray()) == self.mn
+
+    def decode(self, workers: list[int], results_by_row: dict[int, object]):
+        rows = self.rows_of(workers)
+        sub = self.M[rows]
+        data = [results_by_row[r] for r in rows]
+        if self.decode_kind == "hybrid":
+            blocks, _ = hybrid_decode(sub, data)
+            return blocks
+        if self.decode_kind == "peel":
+            sched, _ = peel_schedule(sub, check_rank=False, root_pick="fail")
+            return apply_schedule(sched, data)
+        return gaussian_decode(sub, data)
+
+
+def uncoded(m: int, n: int) -> CodeInstance:
+    """Each of mn workers computes one block; master waits for all."""
+    d = m * n
+    return CodeInstance(
+        name="uncoded",
+        M=sp.identity(d, format="csr"),
+        worker_rows=[[k] for k in range(d)],
+        cost_factor=np.ones(d),
+        decode_kind="dense",  # identity: decode is a no-op relabel
+    )
+
+
+def sparse_code(
+    m: int, n: int, N: int, distribution: str = "wave_soliton",
+    weight_kind: str = "paper", seed: int = 0,
+) -> CodeInstance:
+    """The paper's (P, S)-sparse code."""
+    spec = SparseCodeSpec(m=m, n=n, num_workers=N, distribution=distribution,
+                          weight_kind=weight_kind, seed=seed)
+    M = generate_coefficient_matrix(spec)
+    deg = np.diff(M.indptr)
+    return CodeInstance(
+        name=f"sparse_code[{distribution}]",
+        M=M,
+        worker_rows=[[k] for k in range(N)],
+        cost_factor=deg.astype(np.float64),
+        decode_kind="hybrid",
+    )
+
+
+def lt_code(m: int, n: int, N: int, seed: int = 0) -> CodeInstance:
+    """LT code: Robust Soliton degrees, unit weights, peeling-only decode."""
+    d = m * n
+    rng = np.random.default_rng(seed)
+    probs = degree_lib.robust_soliton(d)
+    rows, cols, vals = [], [], []
+    for k in range(N):
+        deg = int(degree_lib.sample_degrees(rng, probs, 1)[0])
+        chosen = rng.choice(d, size=deg, replace=False)
+        rows.extend([k] * deg)
+        cols.extend(chosen.tolist())
+        vals.extend([1.0] * deg)
+    M = sp.csr_matrix((vals, (rows, cols)), shape=(N, d))
+    deg = np.diff(M.indptr)
+    return CodeInstance(
+        name="lt_code",
+        M=M,
+        worker_rows=[[k] for k in range(N)],
+        cost_factor=deg.astype(np.float64),
+        decode_kind="peel",
+    )
+
+
+def sparse_mds_code(m: int, n: int, N: int, alpha: float = 2.0, seed: int = 0) -> CodeInstance:
+    """Sparse MDS [14]: Bernoulli(alpha*ln(d)/d) generator, Gaussian decode."""
+    d = m * n
+    rng = np.random.default_rng(seed)
+    p = min(1.0, alpha * np.log(max(d, 2)) / d)
+    mask = rng.random((N, d)) < p
+    # Guarantee no empty rows (a worker with nothing to do is useless).
+    for k in range(N):
+        if not mask[k].any():
+            mask[k, rng.integers(d)] = True
+    vals = rng.standard_normal((N, d)) * mask
+    M = sp.csr_matrix(vals)
+    deg = np.diff(M.indptr)
+    return CodeInstance(
+        name="sparse_mds",
+        M=M,
+        worker_rows=[[k] for k in range(N)],
+        cost_factor=deg.astype(np.float64),
+        decode_kind="dense",
+    )
+
+
+def polynomial_code(m: int, n: int, N: int, seed: int = 0) -> CodeInstance:
+    """Polynomial code [7]: worker k computes (sum_i A_i x^i)^T (sum_j B_j x^{jm}).
+
+    Block-domain weight: M[k, i*n+j] = x_k^{i + j*m}.  Any mn rows form a
+    generalized Vandermonde (full rank).  Evaluation points are Chebyshev
+    nodes in [-1, 1] for f64 conditioning (the paper uses integers over a
+    finite field; over R that is numerically unusable past mn ~ 9).
+    """
+    d = m * n
+    x = np.cos(np.pi * (2 * np.arange(1, N + 1) - 1) / (2 * N))  # distinct
+    i_idx, j_idx = np.meshgrid(np.arange(m), np.arange(n), indexing="ij")
+    expo = (i_idx + j_idx * m).reshape(-1)  # flat col i*n+j
+    M = np.power(x[:, None], expo[None, :])
+    return CodeInstance(
+        name="polynomial",
+        M=sp.csr_matrix(M),
+        worker_rows=[[k] for k in range(N)],
+        cost_factor=np.full(N, float(m * n)),  # coded inputs densify m*n-fold
+        decode_kind="dense",
+    )
+
+
+def mds_code(m: int, n: int, N: int, seed: int = 0) -> CodeInstance:
+    """(N, m) MDS on A only [5]: worker u computes A~_u^T B (all of B).
+
+    Block domain: worker u owns n rows; row (u, j) has weights G[u, i] on
+    blocks (i, j).  Decodable from any m workers.  Gaussian G is MDS w.p. 1.
+    """
+    d = m * n
+    rng = np.random.default_rng(seed)
+    G = rng.standard_normal((N, m))
+    rows, cols, vals = [], [], []
+    worker_rows = []
+    r = 0
+    for u in range(N):
+        mine = []
+        for j in range(n):
+            for i in range(m):
+                rows.append(r)
+                cols.append(i * n + j)
+                vals.append(G[u, i])
+            mine.append(r)
+            r += 1
+        worker_rows.append(mine)
+    M = sp.csr_matrix((vals, (rows, cols)), shape=(r, d))
+    return CodeInstance(
+        name="mds",
+        M=M,
+        worker_rows=worker_rows,
+        cost_factor=np.full(N, float(m * n)),  # dense-coded A against full B
+        decode_kind="dense",
+    )
+
+
+def product_code(m: int, n: int, N: int, seed: int = 0) -> CodeInstance:
+    """Product code [9]: grid of workers, MDS-coded along each input.
+
+    Worker (u, v) computes A~_u^T B~_v with A~ = sum_i G[u,i] A_i and
+    B~ = sum_j H[v,j] B_j, so M = G (x) H (Kronecker).  Grid dimensions are
+    the largest (mu, nv) with mu*nv <= N, mu >= m, nv >= n.
+    """
+    rng = np.random.default_rng(seed)
+    mu = max(m, int(np.floor(np.sqrt(N * m / n))))
+    nv = max(n, N // mu)
+    while mu * nv > N and mu > m:
+        mu -= 1
+        nv = max(n, N // mu)
+    G = rng.standard_normal((mu, m))
+    H = rng.standard_normal((nv, n))
+    M = np.kron(G, H)  # rows ordered (u, v) -> u * nv + v; cols (i, j) -> i*n+j
+    num = mu * nv
+    return CodeInstance(
+        name="product",
+        M=sp.csr_matrix(M),
+        worker_rows=[[k] for k in range(num)],
+        cost_factor=np.full(num, float(m * n)),
+        decode_kind="dense",
+    )
+
+
+SCHEMES = {
+    "uncoded": uncoded,
+    "sparse_code": sparse_code,
+    "lt_code": lt_code,
+    "sparse_mds": sparse_mds_code,
+    "polynomial": polynomial_code,
+    "mds": mds_code,
+    "product": product_code,
+}

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These define the exact semantics the kernels must reproduce; every kernel
+test sweeps shapes/dtypes and asserts allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def coded_accum_ref(A, B, cols, weights, m: int, n: int):
+    """C~ = sum_l weights[l] * A_{i_l}^T B_{j_l}  with (i, j) = divmod(cols[l], n).
+
+    A: (s, r), B: (s, t); returns (r/m, t/n) in f32.
+    Padded slots carry weight 0 and contribute nothing.
+    """
+    s, r = A.shape
+    _, t = B.shape
+    br, bt = r // m, t // n
+    acc = jnp.zeros((br, bt), jnp.float32)
+    for l in range(cols.shape[0]):
+        i = cols[l] // n
+        j = cols[l] % n
+        Ai = jnp.asarray(A)[:, i * br:(i + 1) * br] if isinstance(i, int) else \
+            jnp.take(jnp.asarray(A).reshape(s, m, br), i, axis=1)
+        Bj = jnp.asarray(B)[:, j * bt:(j + 1) * bt] if isinstance(j, int) else \
+            jnp.take(jnp.asarray(B).reshape(s, n, bt), j, axis=1)
+        acc = acc + weights[l].astype(jnp.float32) * jnp.einsum(
+            "sr,st->rt", Ai.astype(jnp.float32), Bj.astype(jnp.float32))
+    return acc
+
+
+def spmm_block_ref(vals, idx, B, out_rows: int):
+    """C = A^T B with A given in block-ELL (see repro.sparse.blocksparse).
+
+    vals: (CB, L, bs, bs) tiles of A; idx: (CB, L) source row-block of A.
+    B: (s, t) dense.  Returns C: (out_rows, t) = (CB * bs, t) in f32.
+    Padded slots hold zero tiles, so they add nothing.
+    """
+    CB, L, bs, _ = vals.shape
+    s, t = B.shape
+    Bt = jnp.asarray(B).reshape(s // bs, bs, t)
+    C = jnp.zeros((CB, bs, t), jnp.float32)
+    for cb in range(CB):
+        acc = jnp.zeros((bs, t), jnp.float32)
+        for l in range(L):
+            tile = vals[cb, l].astype(jnp.float32)          # (bs, bs) of A
+            brows = jnp.take(Bt, idx[cb, l], axis=0).astype(jnp.float32)
+            acc = acc + tile.T @ brows
+        C = C.at[cb].set(acc)
+    return C.reshape(CB * bs, t)

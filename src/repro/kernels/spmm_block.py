@@ -1,0 +1,77 @@
+"""Block-sparse SpMM Pallas kernel: C = A^T B with A in block-ELL (TPU target).
+
+TPU adaptation of the paper's sparse local products (DESIGN.md section 3):
+unstructured CSR gathers do not map to the MXU, so A is stored as packed
+bs x bs tiles (repro.sparse.BlockELL).  Each output row-block rb consumes its
+stripe vals[rb, :] of packed tiles; the tile's *source row-block in B* is
+scalar-prefetched from idx[rb, l], so the B tile DMA is issued ahead of the
+matmul.  Compute and HBM traffic scale with the number of LIVE tiles
+(nnz-proportional -- the paper's whole point), not with the dense dimensions.
+
+Grid: (CB, t_tiles, L) -- L innermost so each (rb, tt) output tile stays
+VMEM-resident across its accumulation; zero-padded slots multiply zero tiles
+and add nothing.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, vals_ref, b_ref, o_ref):
+    l = pl.program_id(2)
+
+    @pl.when(l == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    tile = vals_ref[0, 0].astype(jnp.float32)   # (bs, bs) tile of A
+    b = b_ref[0].astype(jnp.float32)            # (bs, t_tile) rows of B
+    # C[rb] += tile^T @ B[idx]
+    o_ref[...] += jax.lax.dot_general(
+        tile, b, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("t_tile", "interpret"))
+def spmm_block(vals, idx, B, *, t_tile: int = 128, interpret: bool = True):
+    """C = A^T B, A in block-ELL.
+
+    vals: (CB, L, bs, bs), idx: (CB, L) int32, B: (s, t).
+    Returns (CB * bs, t) f32.  t must divide by t_tile, s by bs.
+    """
+    CB, L, bs, _ = vals.shape
+    s, t = B.shape
+    if t % t_tile:
+        raise ValueError(f"t={t} not divisible by t_tile={t_tile}")
+    if s % bs:
+        raise ValueError(f"s={s} not divisible by block size {bs}")
+
+    grid = (CB, t // t_tile, L)
+
+    vals_spec = pl.BlockSpec(
+        (1, 1, bs, bs), lambda cb, tt, l, idx_ref: (cb, l, 0, 0)
+    )
+    # B viewed as (s/bs, bs, t): pick row-block idx[cb, l], column tile tt.
+    b_spec = pl.BlockSpec(
+        (1, bs, t_tile), lambda cb, tt, l, idx_ref: (idx_ref[cb, l], 0, tt)
+    )
+    o_spec = pl.BlockSpec((bs, t_tile), lambda cb, tt, l, idx_ref: (cb, tt))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[vals_spec, b_spec],
+        out_specs=o_spec,
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((CB * bs, t), jnp.float32),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), vals, B.reshape(s // bs, bs, t))

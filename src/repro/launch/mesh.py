@@ -1,0 +1,42 @@
+"""Production mesh definitions.
+
+A function, not a module-level constant: importing this module must never
+touch jax device state (the dry-run pins the device count via XLA_FLAGS
+before any jax import; tests and benches keep the default single device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The target deployment mesh.
+
+    single pod : (16, 16)    axes (data, model)  -- 256 chips (TPU v5e pod)
+    multi pod  : (2, 16, 16) axes (pod, data, model) -- 512 chips, the 'pod'
+                 axis is pure data parallelism across ICI-disconnected pods
+                 (DCN), which is also the granularity of the coded
+                 fault-tolerance story (decode a step from K of N pods).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_for_devices(n: int, model_parallel: int = None):
+    """Elastic variant: whatever devices survive, keep TP fixed and shrink
+    the data axis (used by train.py --elastic restarts)."""
+    tp = model_parallel or min(16, n)
+    if n % tp:
+        raise ValueError(f"{n} devices not divisible by model_parallel={tp}")
+    return jax.make_mesh((n // tp, tp), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# Hardware constants for the roofline (TPU v5e).
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (~per-chip useful bound)
+CHIPS_PER_POD = 256

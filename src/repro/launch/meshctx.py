@@ -1,0 +1,74 @@
+"""Process-global mesh context.
+
+Model code calls ``maybe_shard(x, 'data', None, 'model')`` to attach GSPMD
+sharding constraints.  When no mesh is active (CPU smoke tests, single
+device) the call is a no-op, so the same model code runs everywhere.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CURRENT_MESH: jax.sharding.Mesh | None = None
+
+
+def set_mesh(mesh: jax.sharding.Mesh | None) -> None:
+    global _CURRENT_MESH
+    _CURRENT_MESH = mesh
+
+
+def get_mesh() -> jax.sharding.Mesh | None:
+    return _CURRENT_MESH
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: jax.sharding.Mesh):
+    prev = _CURRENT_MESH
+    set_mesh(mesh)
+    try:
+        yield mesh
+    finally:
+        set_mesh(prev)
+
+
+def spec(*axes) -> P:
+    """PartitionSpec, dropping axes the active mesh does not have.
+
+    'dp' is an alias for the full data-parallel product: ('pod', 'data') on a
+    multi-pod mesh, 'data' on a single-pod mesh, dropped with no mesh.
+    """
+    mesh = get_mesh()
+    if mesh is None:
+        return P()
+    names = set(mesh.axis_names)
+    out = []
+    for a in axes:
+        if a == "dp":
+            dp = tuple(x for x in ("pod", "data") if x in names)
+            out.append(dp if len(dp) > 1 else (dp[0] if dp else None))
+        elif a is None:
+            out.append(None)
+        elif isinstance(a, tuple):
+            kept = tuple(x for x in a if x in names)
+            out.append(kept if kept else None)
+        else:
+            out.append(a if a in names else None)
+    return P(*out)
+
+
+def maybe_shard(x, *axes):
+    """with_sharding_constraint when a mesh is active, else identity."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec(*axes)))
+
+
+def named_sharding(*axes) -> NamedSharding | None:
+    mesh = get_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec(*axes))

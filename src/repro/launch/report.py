@@ -1,0 +1,121 @@
+"""Format experiments/dryrun + experiments/roofline JSONs as markdown tables.
+
+  PYTHONPATH=src python -m repro.launch.report [--dryrun|--roofline|--perf]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[3] / "experiments"
+
+
+def _load(d: pathlib.Path):
+    recs = []
+    for p in sorted(d.glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def _gb(x: float) -> str:
+    return f"{x/2**30:.2f}"
+
+
+def dryrun_table() -> str:
+    recs = _load(ROOT / "dryrun")
+    lines = [
+        "| arch | shape | mesh | status | compile_s | flops/dev | HLO bytes/dev | coll bytes/dev | arg GiB/dev | temp GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"{r['status']}: {r.get('reason', r.get('error', ''))[:60]} "
+                         "| | | | | | |")
+            continue
+        ca = r["cost_analysis"]
+        ma = r.get("memory_analysis", {})
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | {r['compile_s']} "
+            f"| {ca['flops_per_device']:.3g} | {ca['bytes_per_device']:.3g} "
+            f"| {r['collectives']['total_bytes']:.3g} "
+            f"| {_gb(ma.get('argument_bytes', 0))} | {_gb(ma.get('temp_bytes', 0))} |")
+    return "\n".join(lines)
+
+
+def roofline_table(include_variants: bool = False) -> str:
+    recs = _load(ROOT / "roofline")
+    lines = [
+        "| arch | shape | opts | compute_s | memory_s | collective_s | dominant "
+        "| MODEL_FLOPS | HLO_FLOPS | useful | roofline<= |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        opts = "+".join(r.get("opts", [])) or "baseline"
+        if not include_variants and opts != "baseline":
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {opts} | "
+                         f"{r['status']}: {r.get('reason', r.get('error',''))[:50]} "
+                         "| | | | | | |")
+            continue
+        t = r["terms"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {opts} "
+            f"| {t['compute_s']:.4g} | {t['memory_s']:.4g} | {t['collective_s']:.4g} "
+            f"| {r['dominant'].replace('_s','')} "
+            f"| {r['model_flops']:.3g} | {r['hlo_flops_total']:.3g} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction_bound']:.2%} |")
+    return "\n".join(lines)
+
+
+def perf_table() -> str:
+    """Baseline vs optimized, per cell that has variants."""
+    recs = _load(ROOT / "roofline")
+    by_cell: dict = {}
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        key = (r["arch"], r["shape"])
+        by_cell.setdefault(key, {})["+".join(r.get("opts", [])) or "baseline"] = r
+    lines = [
+        "| cell | variant | compute_s | memory_s | collective_s | dominant | step bound | vs baseline |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape), variants in sorted(by_cell.items()):
+        if len(variants) < 2:
+            continue
+        base = variants.get("baseline")
+        base_bound = max(base["terms"].values()) if base else None
+        for name, r in sorted(variants.items(), key=lambda kv: kv[0] != "baseline"):
+            t = r["terms"]
+            bound = max(t.values())
+            rel = f"{base_bound / bound:.2f}x" if base_bound and name != "baseline" else "--"
+            lines.append(
+                f"| {arch}/{shape} | {name} | {t['compute_s']:.4g} | {t['memory_s']:.4g} "
+                f"| {t['collective_s']:.4g} | {r['dominant'].replace('_s','')} "
+                f"| {bound:.4g} | {rel} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", action="store_true")
+    ap.add_argument("--roofline", action="store_true")
+    ap.add_argument("--perf", action="store_true")
+    args = ap.parse_args()
+    if args.dryrun or not (args.roofline or args.perf):
+        print("## Dry-run\n")
+        print(dryrun_table())
+    if args.roofline:
+        print("## Roofline (single-pod baselines)\n")
+        print(roofline_table())
+    if args.perf:
+        print("## Perf (baseline vs optimized)\n")
+        print(perf_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Training driver: config-driven, fault-tolerant, elastic.
+
+Production behaviors demonstrated end-to-end on CPU (and directly usable on a
+real mesh by launching one process per host with jax.distributed):
+
+* pjit train step with FSDP ('data') x TP ('model') shardings;
+* periodic async checkpointing + resume-from-latest on restart;
+* coded checkpoint redundancy (--coded-ckpt): restore from any K of N shards;
+* --simulate-failure: kills the process at a step to exercise restart;
+* --elastic: on restart, rebuild the mesh from surviving device count.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+      --reduced --steps 50 --batch 8 --seq 128
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.configs as configs
+from repro.launch import meshctx
+from repro.launch.mesh import make_mesh_for_devices
+from repro.models import build
+from repro.training import checkpoint as ckpt_lib
+from repro.training.data import SyntheticCorpus
+from repro.training.optimizer import AdamW, cosine_warmup_schedule
+from repro.training.train_step import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced config (CPU-feasible)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--coded-ckpt", action="store_true",
+                    help="also write sparse-code erasure shards")
+    ap.add_argument("--opt-dtype", default="float32", choices=["float32", "bfloat16"])
+    ap.add_argument("--simulate-failure", type=int, default=0,
+                    help="exit(17) at this step (restart test)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="build mesh from available devices (TP capped)")
+    ap.add_argument("--model-parallel", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build(cfg)
+
+    ndev = len(jax.devices())
+    mesh = None
+    if ndev > 1 or args.elastic:
+        mesh = make_mesh_for_devices(ndev, args.model_parallel or min(2, ndev))
+        meshctx.set_mesh(mesh)
+        print(f"[train] mesh {dict(mesh.shape)}")
+
+    opt = AdamW(lr=cosine_warmup_schedule(args.lr, args.warmup, args.steps),
+                state_dtype=jnp.dtype(args.opt_dtype))
+    step_fn = make_train_step(model, opt)
+    if mesh is not None:
+        pspecs = jax.tree.map(lambda s: NamedSharding(mesh, meshctx.spec(*s)),
+                              model.specs(), is_leaf=lambda x: isinstance(x, tuple))
+        ospecs = {"m": pspecs, "v": pspecs, "count": NamedSharding(mesh, P())}
+        step_fn = jax.jit(step_fn, in_shardings=(pspecs, ospecs, None),
+                          out_shardings=(pspecs, ospecs, None), donate_argnums=(0, 1))
+    else:
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    ckpt_dir = pathlib.Path(args.ckpt_dir) / cfg.name
+    start = ckpt_lib.latest_step(ckpt_dir)
+    params = model.init(jax.random.key(0), jnp.float32)
+    opt_state = opt.init(params)
+    if start is not None:
+        params, opt_state, start = ckpt_lib.restore_checkpoint(
+            ckpt_dir, params, opt_state)
+        print(f"[train] resumed from step {start}")
+    else:
+        start = 0
+        print(f"[train] fresh start; params="
+              f"{sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params)):,}")
+
+    corpus = SyntheticCorpus(cfg, args.batch, args.seq, seed=0)
+    saver = ckpt_lib.AsyncCheckpointer(ckpt_dir)
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in corpus.make_batch(step).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % 10 == 0 or step == args.steps - 1:
+            loss = float(metrics["loss"])
+            gn = float(metrics["grad_norm"])
+            dt = time.time() - t0
+            print(f"[train] step {step:5d} loss {loss:8.4f} gnorm {gn:8.3f} "
+                  f"({dt:6.1f}s)", flush=True)
+        if args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+            saver.save(step + 1, params, opt_state)
+            if args.coded_ckpt:
+                ckpt_lib.save_coded_checkpoint(ckpt_dir, step + 1, params)
+        if args.simulate_failure and step + 1 == args.simulate_failure:
+            saver.wait()
+            print(f"[train] SIMULATED FAILURE at step {step + 1}", flush=True)
+            sys.exit(17)
+    saver.wait()
+    print(f"[train] done: {args.steps} steps in {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

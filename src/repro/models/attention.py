@@ -1,0 +1,137 @@
+"""GQA attention (self / cross), with RoPE, biases, KV caches.
+
+Sharding: heads over 'model', batch over 'dp'.  GSPMD pads non-divisible
+head counts (qwen2: 28, starcoder2: 36 over TP=16) -- the padding waste is
+surfaced in the roofline's MODEL_FLOPS/HLO ratio.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.meshctx import maybe_shard
+from repro.models.layers import ParamDef, apply_rope
+
+NEG_INF = -2.0 ** 30
+
+
+def attn_defs(cfg, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    defs = {
+        "wq": ParamDef((d, H * hd), spec=("data", "model")),
+        "wk": ParamDef((d, KV * hd), spec=("data", "model")),
+        "wv": ParamDef((d, KV * hd), spec=("data", "model")),
+        "wo": ParamDef((H * hd, d), spec=("model", "data")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((H * hd,), init="zeros", spec=("model",))
+        defs["bk"] = ParamDef((KV * hd,), init="zeros", spec=("model",))
+        defs["bv"] = ParamDef((KV * hd,), init="zeros", spec=("model",))
+    return defs
+
+
+def _project(x, p, cfg, heads, name):
+    out = jnp.einsum("...d,dh->...h", x, p[f"w{name}"])
+    if cfg.qkv_bias and name in ("q", "k", "v"):
+        out = out + p[f"b{name}"]
+    *lead, _ = out.shape
+    out = out.reshape(*lead, heads, cfg.hd)
+    # GQA-TP: shard the head axis only when it divides the TP degree;
+    # otherwise keep K/V replicated over 'model' (cheaper than the
+    # conflicting-sharding repartition GSPMD would emit).
+    from repro.launch.meshctx import get_mesh
+    mesh = get_mesh()
+    tp = mesh.shape.get("model", 1) if mesh is not None else 1
+    if heads % tp == 0:
+        return maybe_shard(out, "dp", None, "model", None)
+    return maybe_shard(out, "dp", None, None, None)
+
+
+def _sdpa(q, k, v, mask=None):
+    """q: (B,S,H,hd)  k/v: (B,T,KV,hd); GQA by head-group broadcast."""
+    B, S, H, hd = q.shape
+    _, T, KV, _ = k.shape
+    rep = H // KV
+    qg = q.reshape(B, S, KV, rep, hd)
+    scores = jnp.einsum("bskrh,btkh->bkrst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkrst,btkh->bskrh", probs, v)
+    return out.reshape(B, S, H, hd)
+
+
+def self_attention(x, p, cfg, positions, *, causal: bool = True, cache=None):
+    """Returns (out, new_cache).  cache = dict(k, v, length) for decode."""
+    B, S, d = x.shape
+    q = _project(x, p, cfg, cfg.num_heads, "q")
+    k = _project(x, p, cfg, cfg.num_kv_heads, "k")
+    v = _project(x, p, cfg, cfg.num_kv_heads, "v")
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        # decode: append this step's k/v at position `length`
+        length = cache["length"]
+        if getattr(cfg, "opt_onehot_cache", False) and S == 1:
+            # one-hot masked update: elementwise, so a sequence-sharded cache
+            # stays fully local (a dynamic-update-slice at a traced position
+            # makes GSPMD re-materialize the whole cache -- the dominant
+            # decode collective in the baseline; see EXPERIMENTS.md Perf)
+            T = cache["k"].shape[1]
+            hot = (jnp.arange(T) == length).astype(cache["k"].dtype)
+            hot = hot[None, :, None, None]
+            ck = cache["k"] * (1 - hot) + k.astype(cache["k"].dtype) * hot
+            cv = cache["v"] * (1 - hot) + v.astype(cache["v"].dtype) * hot
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, length, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, length, 0, 0))
+        new_cache = {"k": ck, "v": cv, "length": length + S}
+        k, v = ck, cv
+        T = k.shape[1]
+        tpos = jnp.arange(T)
+        mask = (tpos[None, :] <= (length + jnp.arange(S))[:, None])  # (S, T)
+        mask = mask[None, None, None, :, :]
+    elif causal:
+        tpos = jnp.arange(S)
+        mask = (tpos[None, :] <= tpos[:, None])[None, None, None, :, :]
+    else:
+        mask = None
+
+    out = _sdpa(q, k, v, mask)
+    out = jnp.einsum("...h,hd->...d", out.reshape(B, S, -1), p["wo"])
+    return maybe_shard(out, "dp", None, None), new_cache
+
+
+def cross_attention(x, memory, p, cfg, *, mem_kv=None):
+    """x: (B,S,d) queries; memory: (B,M,d) (encoder output / image tokens).
+
+    mem_kv: optional precomputed (k, v) of the memory (decode-time reuse).
+    Returns (out, (k, v)).
+    """
+    q = _project(x, p, cfg, cfg.num_heads, "q")
+    if mem_kv is None:
+        k = _project(memory, p, cfg, cfg.num_kv_heads, "k")
+        v = _project(memory, p, cfg, cfg.num_kv_heads, "v")
+    else:
+        k, v = mem_kv
+    out = _sdpa(q, k, v, mask=None)
+    B, S = x.shape[:2]
+    out = jnp.einsum("...h,hd->...d", out.reshape(B, S, -1), p["wo"])
+    return maybe_shard(out, "dp", None, None), (k, v)
+
+
+def init_kv_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    KV, hd = cfg.num_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, max_seq, KV, hd), dtype),
+        "v": jnp.zeros((batch, max_seq, KV, hd), dtype),
+        "length": jnp.int32(0),
+    }

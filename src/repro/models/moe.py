@@ -1,0 +1,230 @@
+"""Mixture-of-Experts with sort-based capacity dispatch (expert parallel).
+
+Tokens are routed top-k, sorted by expert id, packed into an
+(E, capacity, d) buffer and run through batched expert matmuls -- so the
+compiled FLOPs are proportional to *active* compute (top_k / num_experts of
+dense), which is what the roofline's 6 * N_active * D model expects.  Experts
+are sharded over the 'model' axis (EP); the pack/unpack gathers become
+all-to-alls under GSPMD.
+
+The expert-parallel straggler connection (DESIGN.md section 6): expert blocks
+are exactly the paper's block decomposition of a distributed matmul, with
+load imbalance playing the role of stragglers; `coded_moe_demo` in
+examples/ applies the sparse code over expert shards.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.meshctx import maybe_shard
+from repro.models.layers import ParamDef, activation
+
+
+def moe_defs(cfg) -> dict:
+    d = cfg.d_model
+    E, ff = cfg.moe.num_experts, cfg.moe.d_ff
+    return {
+        "router": ParamDef((d, E), init="small_normal", spec=("data", None)),
+        "w_gate": ParamDef((E, d, ff), spec=("model", "data", None)),
+        "w_up": ParamDef((E, d, ff), spec=("model", "data", None)),
+        "w_down": ParamDef((E, ff, d), spec=("model", None, "data")),
+    }
+
+
+def moe_apply(x, p, cfg):
+    """x: (B, S, d) -> (B, S, d).  Load-balance aux loss is returned via
+    a (loss,) side value folded into the output tuple by the caller."""
+    if getattr(cfg, "opt_moe_local_dispatch", False):
+        return moe_apply_local(x, p, cfg)
+    B, S, d = x.shape
+    E = cfg.moe.num_experts
+    k = cfg.moe.top_k
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = jnp.einsum("td,de->te", xt, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)          # (T, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch-style): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(expert_ids[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    capacity = int(max(1, (T * k * cfg.moe.capacity_factor) // E))
+
+    flat_expert = expert_ids.reshape(-1)                      # (T*k,)
+    flat_gate = gate_vals.reshape(-1).astype(x.dtype)
+    flat_token = jnp.repeat(jnp.arange(T), k)
+
+    order = jnp.argsort(flat_expert)
+    se, st, sg = flat_expert[order], flat_token[order], flat_gate[order]
+    # position within expert: arange - start offset of that expert's segment
+    starts = jnp.searchsorted(se, jnp.arange(E))
+    pos = jnp.arange(T * k) - starts[se]
+    keep = pos < capacity
+    pos = jnp.where(keep, pos, 0)
+    sg = jnp.where(keep, sg, 0)
+
+    # pack: (E, C, d)
+    buf = jnp.zeros((E, capacity, d), x.dtype)
+    buf = buf.at[se, pos].add(jnp.where(keep[:, None], xt[st], 0))
+    buf = maybe_shard(buf, "model", None, None)
+
+    h = activation(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]), "silu")
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    h = maybe_shard(h, "model", None, None)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    out_buf = maybe_shard(out_buf, "model", None, None)
+
+    # unpack: gather each (token, choice) result and weighted-sum into tokens
+    contrib = out_buf[se, pos] * sg[:, None]                  # (T*k, d)
+    out = jnp.zeros((T, d), x.dtype).at[st].add(contrib)
+    out = maybe_shard(out.reshape(B, S, d), "dp", None, None)
+    return out, aux
+
+
+def _dp_chunks(T: int) -> int:
+    """Number of token chunks = the dp degree of the active mesh (so each
+    chunk's routing/pack is local to one dp shard)."""
+    from repro.launch.meshctx import get_mesh
+    mesh = get_mesh()
+    if mesh is None:
+        return 1
+    dp = 1
+    for ax in ("pod", "data"):
+        dp *= mesh.shape.get(ax, 1)
+    while T % dp:
+        dp //= 2
+    return max(dp, 1)
+
+
+def moe_apply_local(x, p, cfg):
+    """dp-chunk-local dispatch (opt_moe_local_dispatch).
+
+    The baseline's global sort/scatter makes GSPMD replicate the (T*k, d)
+    update tensor across the mesh (measured: the dominant collective cost on
+    every MoE arch -- see EXPERIMENTS.md section Perf).  Here tokens are
+    routed and packed *within their own dp shard*: the (X, E, Cl, d) buffer
+    is produced identically on every model-column of a dp row (tokens are
+    replicated across 'model'), so constraining it to ('dp', 'model', ...)
+    is a pure local slice -- ZERO dispatch collectives.  The only
+    communication left is the per-layer psum of the combined output, the
+    same shape as a TP layer's all-reduce.
+    """
+    B, S, d = x.shape
+    E = cfg.moe.num_experts
+    k = cfg.moe.top_k
+    T = B * S
+    X = _dp_chunks(T)
+    Tl = T // X
+    xt = maybe_shard(x.reshape(X, Tl, d), "dp", None, None)
+
+    logits = jnp.einsum("xtd,de->xte", xt, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)           # (X, Tl, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(expert_ids[..., 0], E, dtype=jnp.float32),
+                  axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    Cl = int(max(1, (Tl * k * cfg.moe.capacity_factor) // E))
+
+    def route_chunk(xc, eids, gates):
+        """One dp shard's pack: (Tl, d) -> (E, Cl, d) + unpack indices."""
+        fe = eids.reshape(-1)                                 # (Tl*k,)
+        fg = gates.reshape(-1).astype(xc.dtype)
+        ft = jnp.repeat(jnp.arange(Tl), k)
+        order = jnp.argsort(fe)
+        se, st, sg = fe[order], ft[order], fg[order]
+        starts = jnp.searchsorted(se, jnp.arange(E))
+        pos = jnp.arange(Tl * k) - starts[se]
+        keep = pos < Cl
+        pos = jnp.where(keep, pos, 0)
+        sg = jnp.where(keep, sg, 0)
+        buf = jnp.zeros((E, Cl, d), xc.dtype)
+        buf = buf.at[se, pos].add(jnp.where(keep[:, None], xc[st], 0))
+        return buf, se, st, pos, sg
+
+    buf, se, st, pos, sg = jax.vmap(route_chunk)(xt, expert_ids, gate_vals)
+    buf = maybe_shard(buf, "dp", "model", None, None)         # local slice
+
+    h = activation(jnp.einsum("xecd,edf->xecf", buf, p["w_gate"]), "silu")
+    h = h * jnp.einsum("xecd,edf->xecf", buf, p["w_up"])
+    h = maybe_shard(h, "dp", "model", None, None)
+    out_buf = jnp.einsum("xecf,efd->xecd", h, p["w_down"])
+    out_buf = maybe_shard(out_buf, "dp", "model", None, None)
+
+    out = _combine(out_buf, se, st, pos, sg, Tl, d, E, x.dtype, cfg)
+    out = maybe_shard(out, "dp", None, None)
+    return out.reshape(B, S, d), aux
+
+
+def _combine(out_buf, se, st, pos, sg, Tl, d, E, dtype, cfg):
+    """Unpack expert outputs back to tokens.
+
+    Default: vmapped gather + scatter-add; GSPMD turns the gather from the
+    EP-sharded buffer into a masked gather + an all-reduce of the FULL
+    (Tl*k, d) f32 contribution tensor -- measured as the dominant remaining
+    MoE collective (EXPERIMENTS.md It.9).
+
+    opt_moe_shardmap_combine: hand-written shard_map -- each (dp, model)
+    shard gathers only ITS experts' rows, scatter-adds them into a local
+    (Tl, d) partial, and ONE bf16 psum over 'model' combines the partials:
+    2*k/... fewer bytes (k x from pre-summing the top-k contributions, 2x
+    from bf16).
+    """
+    from repro.launch.meshctx import get_mesh
+
+    mesh = get_mesh()
+    X = out_buf.shape[0]
+    use_shardmap = (
+        getattr(cfg, "opt_moe_shardmap_combine", False)
+        and mesh is not None
+        and "model" in mesh.axis_names
+        and E % mesh.shape["model"] == 0
+    )
+    if use_shardmap:
+        dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        dp_total = 1
+        for a in dp_axes:
+            dp_total *= mesh.shape[a]
+        use_shardmap = X == dp_total
+    if not use_shardmap:
+        def combine_chunk(ob, se_c, st_c, pos_c, sg_c):
+            contrib = ob[se_c, pos_c] * sg_c[:, None]          # (Tl*k, d)
+            return jnp.zeros((Tl, d), dtype).at[st_c].add(contrib)
+        return jax.vmap(combine_chunk)(out_buf, se, st, pos, sg)
+
+    from jax.sharding import PartitionSpec as P
+
+    tp = mesh.shape["model"]
+    E_loc = E // tp
+    dp_spec = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def local_fn(ob, se_c, st_c, pos_c, sg_c):
+        # ob: (1, E_loc, Cl, d) this shard's experts; indices replicated
+        # within the dp row, (1, Tl*k) locally
+        e0 = jax.lax.axis_index("model") * E_loc
+        rel = se_c[0] - e0
+        mine = (rel >= 0) & (rel < E_loc)
+        rows = ob[0][jnp.clip(rel, 0, E_loc - 1), pos_c[0]]    # (Tl*k, d)
+        contrib = jnp.where(mine[:, None], rows * sg_c[0][:, None], 0)
+        partial = jnp.zeros((Tl, d), jnp.float32).at[st_c[0]].add(
+            contrib.astype(jnp.float32))
+        summed = jax.lax.psum(partial.astype(jnp.bfloat16), "model")
+        return summed.astype(dtype)[None]
+
+    fn = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(dp_spec, "model", None, None), P(dp_spec, None),
+                  P(dp_spec, None), P(dp_spec, None), P(dp_spec, None)),
+        out_specs=P(dp_spec, None, None),
+        check_vma=False,
+    )
+    return fn(out_buf, se, st, pos, sg)

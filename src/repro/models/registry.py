@@ -1,0 +1,399 @@
+"""Unified model builder: every assigned architecture assembles from the same
+slot machinery, driven purely by ArchConfig.
+
+Layer stacking: the repeating heterogeneous unit (``cfg.layer_plan()``, e.g.
+jamba's [mamba x3, attn, mamba x4] with MoE on odd slots) is one *group*;
+parameters are stacked over ``num_groups`` and the model scans over groups,
+so HLO size is O(group) regardless of depth -- essential for compiling 72
+layers x 512 partitions on this container.
+
+Caches: a single tree {"pos": i32, "groups": {slot_i: ...}} covers KV caches
+(attention), conv+ssm states (mamba), and recurrent states (rwkv); prefill
+and decode share the forward path (prefill = forward with cache at pos=0).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.meshctx import maybe_shard
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import rwkv as rwkv_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    ParamDef,
+    cross_entropy_chunked,
+    cross_entropy_fused,
+    mlp_apply,
+    mlp_defs,
+    norm,
+    sinusoidal_positions,
+    tree_init,
+    tree_shapes,
+    tree_specs,
+)
+
+AUX_LOSS_COEF = 0.01
+
+
+def _norm_def():
+    return ParamDef((0,), init="ones")  # shape patched by _slot_defs
+
+
+class Model:
+    """Build with repro.models.registry.build(cfg)."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.plan = self._plan()
+
+    # ------------------------------ plan -----------------------------------
+
+    def _plan(self):
+        cfg = self.cfg
+        plan = cfg.layer_plan()
+        if cfg.family == "encdec":
+            plan = [("self_cross", f) for _, f in plan]
+        return plan
+
+    # --------------------------- param defs ---------------------------------
+
+    def _slot_defs(self, mixer: str, ffn: str) -> dict:
+        cfg = self.cfg
+        d = cfg.d_model
+        nd = ParamDef((d,), init="ones")
+        slot: dict = {"norm1": nd, "norm2": nd}
+        if mixer == "attn":
+            slot["mixer"] = attn_lib.attn_defs(cfg)
+        elif mixer == "cross":
+            slot["mixer"] = attn_lib.attn_defs(cfg, cross=True)
+        elif mixer == "self_cross":
+            slot["mixer"] = attn_lib.attn_defs(cfg)
+            slot["cross"] = attn_lib.attn_defs(cfg, cross=True)
+            slot["norm_x"] = nd
+        elif mixer == "mamba":
+            slot["mixer"] = ssm_lib.mamba_defs(cfg)
+        elif mixer == "rwkv":
+            slot["mixer"] = rwkv_lib.rwkv_defs(cfg)
+        else:
+            raise ValueError(mixer)
+        if ffn == "moe":
+            slot["ffn"] = moe_lib.moe_defs(cfg)
+        elif mixer == "rwkv":
+            slot["ffn"] = rwkv_lib.channel_mix_defs(cfg)
+        else:
+            slot["ffn"] = mlp_defs(d, cfg.d_ff, cfg.act, cfg.mlp_bias)
+        return slot
+
+    def param_defs(self) -> dict:
+        cfg = self.cfg
+        d, V = cfg.d_model, cfg.vocab_size
+        G = cfg.num_groups
+
+        def stack(defs, reps):
+            return jax.tree.map(
+                lambda pd: dataclasses.replace(pd, shape=(reps,) + pd.shape,
+                                               spec=(None,) + tuple(pd.spec)),
+                defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+        groups = {}
+        for s, (mixer, ffn) in enumerate(self.plan):
+            groups[f"slot{s}"] = stack(self._slot_defs(mixer, ffn), G)
+
+        defs: dict = {
+            "embed": ParamDef((V, d), spec=("model", None)),
+            "final_norm": ParamDef((d,), init="ones"),
+            "groups": groups,
+        }
+        if not cfg.tie_embeddings:
+            defs["head"] = ParamDef((d, V), spec=(None, "model"))
+        if cfg.family == "encdec":
+            enc_slot = self._slot_defs("attn", "mlp")
+            defs["encoder"] = stack(enc_slot, cfg.encoder_layers)
+            defs["enc_final_norm"] = ParamDef((d,), init="ones")
+        return defs
+
+    def init(self, rng, dtype=jnp.float32):
+        return tree_init(self.param_defs(), rng, dtype)
+
+    def shapes(self, dtype=jnp.bfloat16):
+        return tree_shapes(self.param_defs(), dtype)
+
+    def specs(self):
+        return tree_specs(self.param_defs())
+
+    # ----------------------------- caches -----------------------------------
+
+    def _slot_cache(self, mixer: str, batch: int, max_seq: int, dtype):
+        cfg = self.cfg
+        KV, hd = cfg.num_kv_heads, cfg.hd
+        if mixer == "attn":
+            return {"k": jnp.zeros((batch, max_seq, KV, hd), dtype),
+                    "v": jnp.zeros((batch, max_seq, KV, hd), dtype)}
+        if mixer == "cross":
+            M = cfg.vision_tokens
+            return {"mk": jnp.zeros((batch, M, KV, hd), dtype),
+                    "mv": jnp.zeros((batch, M, KV, hd), dtype)}
+        if mixer == "self_cross":
+            M = cfg.encoder_seq
+            return {"k": jnp.zeros((batch, max_seq, KV, hd), dtype),
+                    "v": jnp.zeros((batch, max_seq, KV, hd), dtype),
+                    "mk": jnp.zeros((batch, M, KV, hd), dtype),
+                    "mv": jnp.zeros((batch, M, KV, hd), dtype)}
+        if mixer == "mamba":
+            return ssm_lib.mamba_init_state(cfg, batch, dtype)
+        if mixer == "rwkv":
+            return rwkv_lib.rwkv_init_state(cfg, batch, dtype)
+        raise ValueError(mixer)
+
+    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        G = self.cfg.num_groups
+
+        def stack_tree(tree):
+            return jax.tree.map(lambda a: jnp.broadcast_to(a, (G,) + a.shape), tree)
+
+        groups = {f"slot{s}": stack_tree(self._slot_cache(mixer, batch, max_seq, dtype))
+                  for s, (mixer, _) in enumerate(self.plan)}
+        return {"pos": jnp.int32(0), "groups": groups}
+
+    def cache_specs(self, cache):
+        """PartitionSpec tree for a cache, keyed by what each leaf is:
+
+        KV caches (k/v/mk/mv, (G,B,S,KV,hd)): batch over dp, *sequence* over
+        'model' -- flash-decode style: each TP shard attends to its slice of
+        the sequence and GSPMD inserts the partial-softmax combine.  Mamba
+        conv/ssm states: d_inner over 'model'.  RWKV state S: heads over
+        'model'.  Non-divisible dims are replicated by the dry-run's
+        sanitizer.
+        """
+        from repro.launch.meshctx import spec as mk
+
+        def leaf_spec(path, a):
+            names = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
+            if a.ndim == 0:
+                return mk()
+            if names and names[-1] in ("k", "v", "mk", "mv"):
+                return mk(None, "dp", "model", None, None)
+            if names and names[-1] == "S":          # rwkv state (G,B,H,hs,hs)
+                return mk(None, "dp", "model", None, None)
+            if isinstance(names[-1], int) and a.ndim == 4 and names[-1] == 0:
+                return mk(None, "dp", None, "model")   # mamba conv (G,B,dc-1,di)
+            if isinstance(names[-1], int) and a.ndim == 4 and names[-1] == 1:
+                return mk(None, "dp", "model", None)   # mamba h (G,B,di,ds)
+            return mk(*([None, "dp"] + [None] * (a.ndim - 2)))
+
+        return jax.tree_util.tree_map_with_path(leaf_spec, cache)
+
+    # ---------------------------- forward ------------------------------------
+
+    def _apply_slot(self, x, p, mixer, ffn, positions, cache, memory):
+        cfg = self.cfg
+        # Megatron-SP (opt_seq_parallel, training only): block outputs are
+        # constrained sequence-sharded over 'model', so GSPMD lowers each TP
+        # psum as a reduce-scatter (half the bytes) and the norms/residual
+        # adds run sharded; the next block's first matmul all-gathers.
+        sp = cache is None and getattr(cfg, "opt_seq_parallel", False)
+
+        def out_shard(t):
+            return maybe_shard(t, "dp", "model", None) if sp else t
+
+        def tp_save(t):
+            # tag TP-psum'd outputs for the remat policy (opt_remat_save_tp)
+            if cache is None and getattr(cfg, "opt_remat_save_tp", False):
+                from jax.ad_checkpoint import checkpoint_name
+                return checkpoint_name(t, "tp_out")
+            return t
+
+        aux = jnp.float32(0)
+        h = norm(x, p["norm1"], cfg.norm)
+        new_cache = cache
+        if mixer == "attn":
+            c = None
+            if cache is not None:
+                c = {"k": cache["k"], "v": cache["v"], "length": positions[0]}
+            out, nc = attn_lib.self_attention(h, p["mixer"], cfg, positions, cache=c)
+            if cache is not None:
+                new_cache = {"k": nc["k"], "v": nc["v"]}
+        elif mixer == "cross":
+            mem_kv = None
+            if cache is not None and memory is None:
+                mem_kv = (cache["mk"], cache["mv"])
+            out, (mk, mv) = attn_lib.cross_attention(h, memory, p["mixer"], cfg,
+                                                     mem_kv=mem_kv)
+            if cache is not None:
+                new_cache = {"mk": mk, "mv": mv}
+        elif mixer == "self_cross":
+            c = None
+            if cache is not None:
+                c = {"k": cache["k"], "v": cache["v"], "length": positions[0]}
+            out, nc = attn_lib.self_attention(h, p["mixer"], cfg, positions, cache=c)
+            x = x + out
+            h = norm(x, p["norm_x"], cfg.norm)
+            mem_kv = None
+            if cache is not None and memory is None:
+                mem_kv = (cache["mk"], cache["mv"])
+            out, (mk, mv) = attn_lib.cross_attention(h, memory, p["cross"], cfg,
+                                                     mem_kv=mem_kv)
+            if cache is not None:
+                new_cache = {"k": nc["k"], "v": nc["v"], "mk": mk, "mv": mv}
+        elif mixer == "mamba":
+            out, nc = ssm_lib.mamba_apply(h, p["mixer"], cfg, state=cache)
+            if cache is not None:
+                new_cache = nc
+        elif mixer == "rwkv":
+            out, nc = rwkv_lib.rwkv_apply(h, p["mixer"], cfg, state=cache)
+            if cache is not None:
+                new_cache = nc
+        else:
+            raise ValueError(mixer)
+        x = x + out_shard(tp_save(out))
+
+        h = norm(x, p["norm2"], cfg.norm)
+        if ffn == "moe":
+            out, aux = moe_lib.moe_apply(h, p["ffn"], cfg)
+        elif mixer == "rwkv":
+            last = new_cache["last_cm"] if cache is not None else None
+            out, _ = rwkv_lib.channel_mix_apply(h, p["ffn"], cfg, last=last)
+            if cache is not None:
+                new_cache = dict(new_cache, last_cm=x[:, -1])
+        else:
+            out = mlp_apply(h, p["ffn"], cfg.act, cfg.mlp_bias)
+        x = x + out_shard(tp_save(out))
+        return x, aux, new_cache
+
+    def _run_groups(self, x, params, positions, cache, memory):
+        """Scan over the stacked groups."""
+        plan = self.plan
+        groups_p = params["groups"]
+        groups_c = cache["groups"] if cache is not None else None
+
+        def body(carry, xs):
+            x, aux = carry
+            p_g = xs[0]
+            c_g = xs[1] if cache is not None else None
+            new_c_g = {}
+            for s, (mixer, ffn) in enumerate(plan):
+                slot_c = c_g[f"slot{s}"] if c_g is not None else None
+                x, a, nc = self._apply_slot(x, p_g[f"slot{s}"], mixer, ffn,
+                                            positions, slot_c, memory)
+                aux = aux + a
+                if c_g is not None:
+                    new_c_g[f"slot{s}"] = nc
+            if cache is None and getattr(self.cfg, "opt_seq_parallel", False):
+                # Megatron-SP: the residual stream lives sequence-sharded over
+                # 'model' between blocks, so the TP all-reduce pair becomes a
+                # reduce-scatter + all-gather (half the bytes) and the norms /
+                # elementwise work shard too.
+                x = maybe_shard(x, "dp", "model", None)
+            else:
+                x = maybe_shard(x, "dp", None, None)
+            return (x, aux), (new_c_g if c_g is not None else 0)
+
+        if cache is None and getattr(self.cfg, "remat", True):
+            # activation checkpointing at layer-group granularity: backward
+            # recomputes each group, peak activations ~ one group deep
+            if getattr(self.cfg, "opt_remat_save_tp", False):
+                body = jax.checkpoint(
+                    body,
+                    policy=jax.checkpoint_policies.save_only_these_names("tp_out"))
+            else:
+                body = jax.checkpoint(body)
+        xs = (groups_p, groups_c) if cache is not None else (groups_p,)
+        (x, aux), ys = jax.lax.scan(body, (x, jnp.float32(0)), xs,
+                                    unroll=getattr(self, "scan_unroll", False))
+        new_groups = ys if cache is not None else None
+        return x, aux, new_groups
+
+    def _encode(self, params, frames):
+        """Whisper encoder on stubbed frame embeddings (B, M, d)."""
+        cfg = self.cfg
+        x = frames + sinusoidal_positions(frames.shape[1], cfg.d_model
+                                          ).astype(frames.dtype)
+        positions = jnp.arange(frames.shape[1])
+
+        def body(x, p_l):
+            h = norm(x, p_l["norm1"], cfg.norm)
+            out, _ = attn_lib.self_attention(h, p_l["mixer"], cfg, positions,
+                                             causal=False)
+            x = x + out
+            h = norm(x, p_l["norm2"], cfg.norm)
+            x = x + mlp_apply(h, p_l["ffn"], cfg.act, cfg.mlp_bias)
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, params["encoder"],
+                            unroll=getattr(self, "scan_unroll", False))
+        return norm(x, params["enc_final_norm"], cfg.norm)
+
+    def forward(self, params, tokens, *, extras=None, cache=None):
+        """tokens: (B, S) -> hidden (B, S, d), aux, new_cache."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = maybe_shard(x, "dp", None, None)
+        pos0 = cache["pos"] if cache is not None else 0
+        positions = pos0 + jnp.arange(S)
+        if not cfg.use_rope:
+            pe = sinusoidal_positions(cfg.max_seq, cfg.d_model).astype(x.dtype)
+            x = x + jax.lax.dynamic_slice(pe, (pos0, 0), (S, pe.shape[1]))[None]
+
+        memory = None
+        if cfg.family == "encdec":
+            if extras is not None and "frames" in extras:
+                memory = self._encode(params, extras["frames"])
+        elif cfg.family == "vlm":
+            if extras is not None and "vision" in extras:
+                memory = maybe_shard(extras["vision"], "dp", None, None)
+
+        x, aux, new_groups = self._run_groups(x, params, positions, cache, memory)
+        x = norm(x, params["final_norm"], cfg.norm)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"pos": pos0 + S, "groups": new_groups}
+        return x, aux, new_cache
+
+    # ------------------------------ heads ------------------------------------
+
+    def head_weight(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].T  # (d, V), vocab stays sharded over model
+        return params["head"]
+
+    def logits(self, params, x):
+        logits = jnp.einsum("...d,dv->...v", x, self.head_weight(params))
+        return maybe_shard(logits.astype(jnp.float32), "dp", None, "model")
+
+    def loss(self, params, batch):
+        """batch: tokens (B,S), labels (B,S), [frames|vision]."""
+        extras = {k: v for k, v in batch.items() if k in ("frames", "vision")}
+        x, aux, _ = self.forward(params, batch["tokens"], extras=extras)
+        B, S, d = x.shape
+        ce = (cross_entropy_fused if getattr(self.cfg, "opt_fused_ce", False)
+              else cross_entropy_chunked)
+        nll = ce(
+            x.reshape(B * S, d), self.head_weight(params),
+            batch["labels"].reshape(-1),
+            chunk=getattr(self, "ce_chunk", None) or min(4096, B * S),
+            unroll=getattr(self, "scan_unroll", False))
+        return nll + AUX_LOSS_COEF * aux
+
+    def prefill(self, params, tokens, *, extras=None, cache=None,
+                max_seq: int | None = None, cache_dtype=jnp.bfloat16):
+        if cache is None:
+            cache = self.init_cache(tokens.shape[0], max_seq or self.cfg.max_seq,
+                                    cache_dtype)
+        x, _, cache = self.forward(params, tokens, extras=extras, cache=cache)
+        return self.logits(params, x[:, -1:]), cache
+
+    def decode_step(self, params, cache, tokens):
+        """tokens: (B, 1) -> (logits (B,1,V), cache)."""
+        x, _, cache = self.forward(params, tokens, cache=cache)
+        return self.logits(params, x), cache
+
+
+def build(cfg) -> Model:
+    return Model(cfg)

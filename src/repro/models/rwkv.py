@@ -1,0 +1,161 @@
+"""RWKV-6 "Finch" token-mixing block: attention-free, data-dependent decay.
+
+Per head of size hs, the recurrent state S in R^{hs x hs} evolves as
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+
+with w_t = exp(-exp(decay(x_t))) a *data-dependent* per-channel decay (the
+RWKV-6 novelty vs RWKV-4/5's static decay) produced by a low-rank MLP, and
+token-shift interpolation on every projection input.  Linear in sequence
+length -> this arch runs the long_500k shape.
+
+Training/prefill scans over time with state (B, H, hs, hs); decode carries
+(last_x, state).  Heads are sharded over 'model'.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.meshctx import maybe_shard
+from repro.models.layers import ParamDef, activation
+
+
+DECAY_RANK = 64
+
+
+def rwkv_defs(cfg) -> dict:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    H = d // hs
+    return {
+        # token-shift interpolation weights for r/k/v/g/w inputs
+        "mu": ParamDef((5, d), init="small_normal", spec=(None, None)),
+        "wr": ParamDef((d, d), spec=("data", "model")),
+        "wk": ParamDef((d, d), spec=("data", "model")),
+        "wv": ParamDef((d, d), spec=("data", "model")),
+        "wg": ParamDef((d, d), spec=("data", "model")),
+        "wo": ParamDef((d, d), spec=("model", "data")),
+        # low-rank data-dependent decay: d -> rank -> d
+        "decay_a": ParamDef((d, DECAY_RANK), init="small_normal", spec=("data", None)),
+        "decay_b": ParamDef((DECAY_RANK, d), init="small_normal", spec=(None, "model")),
+        "decay_base": ParamDef((d,), init="zeros", spec=("model",)),
+        "u": ParamDef((H, hs), init="small_normal", spec=("model", None)),
+        "ln_out": ParamDef((d,), init="ones", spec=()),
+    }
+
+
+def channel_mix_defs(cfg) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "mu": ParamDef((2, d), init="small_normal", spec=(None, None)),
+        "wk": ParamDef((d, ff), spec=("data", "model")),
+        "wv": ParamDef((ff, d), spec=("model", "data")),
+        "wr": ParamDef((d, d), spec=("data", None)),
+    }
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros / `last` for the first position)."""
+    B, S, d = x.shape
+    if S == 1:
+        prev = jnp.zeros_like(x) if last is None else last[:, None]
+        return prev
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if last is not None:
+        shifted = shifted.at[:, 0].set(last)
+    return shifted
+
+
+def _mix(x, xprev, mu):
+    return x + (xprev - x) * mu
+
+
+def rwkv_apply(x, p, cfg, *, state=None):
+    """x: (B,S,d).  state=None -> scan (training/prefill), returns (out, None);
+    else state = dict(last_x (B,d), last_cm (B,d), S (B,H,hs,hs)) -> decode,
+    returns (out, new_state)."""
+    B, S, d = x.shape
+    hs = cfg.rwkv_head_size
+    H = d // hs
+
+    last_x = None if state is None else state["last_x"]
+    xprev = _shift(x, last_x)
+    xr = _mix(x, xprev, p["mu"][0])
+    xk = _mix(x, xprev, p["mu"][1])
+    xv = _mix(x, xprev, p["mu"][2])
+    xg = _mix(x, xprev, p["mu"][3])
+    xw = _mix(x, xprev, p["mu"][4])
+
+    def heads(t):
+        return maybe_shard(t.reshape(B, S, H, hs), "dp", None, "model", None)
+
+    r = heads(jnp.einsum("bsd,de->bse", xr, p["wr"]))
+    k = heads(jnp.einsum("bsd,de->bse", xk, p["wk"]))
+    v = heads(jnp.einsum("bsd,de->bse", xv, p["wv"]))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"]))
+    # data-dependent decay in (0, 1): w = exp(-exp(lora(xw) + base))
+    dec = jnp.einsum("bsd,dr->bsr", xw, p["decay_a"])
+    dec = jnp.einsum("bsr,rd->bsd", jnp.tanh(dec), p["decay_b"]) + p["decay_base"]
+    w = jnp.exp(-jnp.exp(dec.astype(jnp.float32))).reshape(B, S, H, hs)
+
+    u = p["u"].astype(jnp.float32)
+
+    def step(Sst, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,hs) each
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t).astype(jnp.float32)
+        o = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       Sst + u[None, :, :, None] * kv)
+        Sst = w_t[..., None] * Sst + kv
+        return Sst, o
+
+    if state is None:
+        S0 = jnp.zeros((B, H, hs, hs), jnp.float32)
+    else:
+        S0 = state["S"]
+
+    seq = (r.transpose(1, 0, 2, 3).astype(jnp.float32),
+           k.transpose(1, 0, 2, 3).astype(jnp.float32),
+           v.transpose(1, 0, 2, 3).astype(jnp.float32),
+           w.transpose(1, 0, 2, 3))
+    S_fin, os = jax.lax.scan(step, S0, seq)
+    o = os.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+
+    # group norm over heads (approximated by rmsnorm on the full vector)
+    var = jnp.mean(jnp.square(o.reshape(B, S, H, hs).astype(jnp.float32)),
+                   axis=-1, keepdims=True)
+    o = (o.reshape(B, S, H, hs) * jax.lax.rsqrt(var + 1e-6)).reshape(B, S, d)
+    o = o.astype(x.dtype) * p["ln_out"]
+    out = jnp.einsum("bsd,de->bse", o * g, p["wo"])
+    out = maybe_shard(out, "dp", None, None)
+
+    if state is None:
+        return out, None
+    new_state = {"last_x": x[:, -1], "last_cm": state["last_cm"], "S": S_fin}
+    return out, new_state
+
+
+def channel_mix_apply(x, p, cfg, *, last=None):
+    """RWKV channel mix (the arch's FFN): relu^2 with receptance gate.
+    Returns (out, new_last)."""
+    xprev = _shift(x, last)
+    xk = _mix(x, xprev, p["mu"][0])
+    xr = _mix(x, xprev, p["mu"][1])
+    kk = activation(jnp.einsum("bsd,df->bsf", xk, p["wk"]), "relu_sq")
+    kk = maybe_shard(kk, "dp", None, "model")
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["wv"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"]))
+    return rr * vv, (x[:, -1] if last is not None else None)
+
+
+def rwkv_init_state(cfg, batch: int, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    H = d // hs
+    return {
+        "last_x": jnp.zeros((batch, d), dtype),
+        "last_cm": jnp.zeros((batch, d), dtype),
+        "S": jnp.zeros((batch, H, hs, hs), jnp.float32),
+    }

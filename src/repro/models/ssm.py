@@ -1,0 +1,96 @@
+"""Mamba selective SSM block (for the jamba hybrid).
+
+Faithful-in-structure Mamba-1: in-proj to (x, z) of width d_inner, depthwise
+causal conv, data-dependent (dt, B, C), diagonal state-space scan, gated
+out-proj.  One code path covers train / prefill / decode: the causal conv
+takes its left context from the carried conv state and the SSM scan starts
+from the carried h -- with state=None (training) both start at zero and no
+state is returned.  d_inner is sharded over 'model'.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.meshctx import maybe_shard
+from repro.models.layers import ParamDef
+
+
+def _dims(cfg):
+    di = cfg.ssm.expand * cfg.d_model
+    dt_rank = max(1, cfg.d_model // 16)
+    return di, dt_rank, cfg.ssm.d_state, cfg.ssm.d_conv
+
+
+def mamba_defs(cfg) -> dict:
+    d = cfg.d_model
+    di, dt_rank, ds, dc = _dims(cfg)
+    return {
+        "in_proj": ParamDef((d, 2 * di), spec=("data", "model")),
+        "conv_w": ParamDef((dc, di), spec=(None, "model")),
+        "conv_b": ParamDef((di,), init="zeros", spec=("model",)),
+        "x_proj": ParamDef((di, dt_rank + 2 * ds), spec=("model", None)),
+        "dt_proj": ParamDef((dt_rank, di), spec=(None, "model")),
+        "dt_bias": ParamDef((di,), init="zeros", spec=("model",)),
+        "A_log": ParamDef((di, ds), init="zeros", spec=("model", None)),
+        "D": ParamDef((di,), init="ones", spec=("model",)),
+        "out_proj": ParamDef((di, d), spec=("model", "data")),
+    }
+
+
+def mamba_apply(x, p, cfg, *, state=None):
+    """x: (B, S, d) -> (out (B, S, d), new_state | None).
+
+    state: None (training) or (conv_state (B, dc-1, di), h (B, di, ds)).
+    """
+    B, S, d = x.shape
+    di, dt_rank, ds, dc = _dims(cfg)
+
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)                  # (B,S,di) each
+    xin = maybe_shard(xin, "dp", None, "model")
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))        # (di, ds)
+
+    if state is None:
+        conv_state = jnp.zeros((B, dc - 1, di), x.dtype)
+        h0 = jnp.zeros((B, di, ds), jnp.float32)
+    else:
+        conv_state, h0 = state
+
+    # causal depthwise conv with carried left context
+    xpad = jnp.concatenate([conv_state.astype(xin.dtype), xin], axis=1)
+    xc = sum(xpad[:, i:i + S] * p["conv_w"][i] for i in range(dc))
+    xc = jax.nn.silu(xc + p["conv_b"])                  # (B,S,di)
+
+    proj = jnp.einsum("bsd,dk->bsk", xc, p["x_proj"])
+    dt, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,rd->bsd", dt, p["dt_proj"]) + p["dt_bias"])
+
+    def step(h, inp):
+        xc_t, dt_t, B_t, C_t = inp                      # (B,di),(B,di),(B,ds),(B,ds)
+        dA = jnp.exp(dt_t[..., None].astype(jnp.float32) * A)
+        dBx = (dt_t * xc_t)[..., None].astype(jnp.float32) * B_t[:, None, :].astype(jnp.float32)
+        h = h * dA + dBx
+        y = jnp.einsum("bds,bs->bd", h, C_t.astype(jnp.float32))
+        return h, y
+
+    xs = (xc.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2))
+    h_fin, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2).astype(x.dtype)           # (B,S,di)
+    y = y + xc * p["D"]
+    out = jnp.einsum("bsd,de->bse", jax.nn.silu(z) * y, p["out_proj"])
+    out = maybe_shard(out, "dp", None, None)
+
+    if state is None:
+        return out, None
+    new_conv = xpad[:, -(dc - 1):] if dc > 1 else conv_state
+    return out, (new_conv, h_fin)
+
+
+def mamba_init_state(cfg, batch: int, dtype=jnp.bfloat16):
+    di, _, ds, dc = _dims(cfg)
+    return (jnp.zeros((batch, dc - 1, di), dtype),
+            jnp.zeros((batch, di, ds), jnp.float32))

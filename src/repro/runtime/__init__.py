@@ -1,0 +1,12 @@
+from repro.runtime.straggler import (
+    StragglerModel,
+    NoStragglers,
+    SlowWorkers,
+    ExponentialStragglers,
+    ShiftedExponential,
+)
+from repro.runtime.executor import (
+    ExecutionReport,
+    run_coded_job,
+    run_live_job,
+)

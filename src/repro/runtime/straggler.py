@@ -1,0 +1,65 @@
+"""Straggler models for the distributed runtime.
+
+The paper's experimental protocol (Section V): "randomly pick s workers that
+are running a background thread which increases the computation time."  That
+is ``SlowWorkers(s, slowdown)``.  The tail-at-scale literature motivates the
+exponential / shifted-exponential variants used in the coded-computation
+analyses [4]-[8].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+class StragglerModel:
+    """Multiplier/addend applied to each worker's nominal compute time."""
+
+    def completion_times(self, nominal: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class NoStragglers(StragglerModel):
+    def completion_times(self, nominal, rng):
+        return np.asarray(nominal, dtype=np.float64)
+
+
+@dataclasses.dataclass
+class SlowWorkers(StragglerModel):
+    """Paper's model: s uniformly random workers slowed by a factor."""
+
+    num_slow: int
+    slowdown: float = 5.0
+
+    def completion_times(self, nominal, rng):
+        t = np.asarray(nominal, dtype=np.float64).copy()
+        n = len(t)
+        s = min(self.num_slow, n)
+        idx = rng.choice(n, size=s, replace=False)
+        t[idx] *= self.slowdown
+        return t
+
+
+@dataclasses.dataclass
+class ExponentialStragglers(StragglerModel):
+    """t_k = nominal_k * (1 + Exp(scale)): heavy right tail on every worker."""
+
+    scale: float = 0.5
+
+    def completion_times(self, nominal, rng):
+        t = np.asarray(nominal, dtype=np.float64)
+        return t * (1.0 + rng.exponential(self.scale, size=len(t)))
+
+
+@dataclasses.dataclass
+class ShiftedExponential(StragglerModel):
+    """Classic coded-computation model: t_k = nominal_k + Exp(scale * nominal_k)."""
+
+    scale: float = 1.0
+
+    def completion_times(self, nominal, rng):
+        t = np.asarray(nominal, dtype=np.float64)
+        return t + rng.exponential(self.scale * np.maximum(t, 1e-12))

@@ -1,0 +1,52 @@
+"""Serving steps: batched prefill + single-token decode with sampling.
+
+``make_prefill_step`` / ``make_decode_step`` are the functions the dry-run
+lowers for the prefill_32k / decode_32k / long_500k shapes: decode is ONE new
+token against a KV/state cache of the shape's seq_len, exactly per the
+assignment.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def make_prefill_step(model, max_seq: int, cache_dtype=jnp.bfloat16):
+    def prefill_step(params, batch):
+        extras = {k: v for k, v in batch.items() if k in ("frames", "vision")}
+        logits, cache = model.prefill(params, batch["tokens"], extras=extras,
+                                      max_seq=max_seq, cache_dtype=cache_dtype)
+        return logits, cache
+    return prefill_step
+
+
+def make_decode_step(model, temperature: float = 0.0):
+    def decode_step(params, cache, tokens, rng):
+        logits, cache = model.decode_step(params, cache, tokens)
+        last = logits[:, -1]
+        if temperature > 0:
+            next_tok = jax.random.categorical(rng, last / temperature, axis=-1)
+        else:
+            next_tok = jnp.argmax(last, axis=-1)
+        return next_tok.astype(jnp.int32)[:, None], cache
+    return decode_step
+
+
+def generate(model, params, prompt, *, steps: int, max_seq: int,
+             temperature: float = 0.0, extras=None, rng=None,
+             cache_dtype=jnp.bfloat16):
+    """Greedy/temperature generation loop (example/driver use)."""
+    rng = rng if rng is not None else jax.random.key(0)
+    logits, cache = model.prefill(params, prompt, extras=extras,
+                                  max_seq=max_seq, cache_dtype=cache_dtype)
+    decode = jax.jit(make_decode_step(model, temperature))
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    out = [tok]
+    for i in range(steps - 1):
+        rng, sub = jax.random.split(rng)
+        tok, cache = decode(params, cache, tok, sub)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,6 @@
+from repro.sparse.blocksparse import (
+    BlockELL,
+    dense_to_block_ell,
+    block_ell_to_dense,
+    block_density,
+)

@@ -1,0 +1,101 @@
+"""Block-sparse substrate: the TPU-native representation of sparsity.
+
+The paper's CPU implementation uses unstructured CSR.  A TPU has no
+gather/scatter sparse units -- its compute lives in the 128x128 MXU -- so the
+faithful *adaptation* (DESIGN.md section 3) is block-granular sparsity aligned
+to the MXU tile: a matrix is a grid of bs x bs tiles, and only nonzero tiles
+are stored and multiplied.
+
+Format ("block-ELL", column-block major, used by the spmm_block kernel):
+
+  vals : (n_col_blocks, L, bs, bs)   packed nonzero tiles (zero-padded rows)
+  idx  : (n_col_blocks, L)           source row-block index of each tile
+  nnzb : (n_col_blocks,)             how many of the L slots are live
+
+For C = A^T B, column-blocks of A are row-blocks of C, so each output row
+block consumes exactly one (vals[rb], idx[rb]) stripe -- a clean Pallas grid.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class BlockELL:
+    vals: np.ndarray   # (CB, L, bs, bs)
+    idx: np.ndarray    # (CB, L) int32
+    nnzb: np.ndarray   # (CB,) int32
+    shape: tuple[int, int]  # dense (rows, cols)
+    block_size: int
+
+    @property
+    def num_col_blocks(self) -> int:
+        return self.vals.shape[0]
+
+    @property
+    def slots(self) -> int:
+        return self.vals.shape[1]
+
+    def density(self) -> float:
+        rb = self.shape[0] // self.block_size
+        return float(self.nnzb.sum()) / (rb * self.num_col_blocks)
+
+
+def dense_to_block_ell(A: np.ndarray, block_size: int = 8,
+                       slots: int | None = None) -> BlockELL:
+    """Pack a dense matrix into block-ELL (keeps every nonzero tile).
+
+    slots: pad/truncate the per-column-block tile count to this many slots
+    (default: the max over column blocks).  Truncation drops the
+    smallest-magnitude tiles -- used only by the approximate paths, the
+    default keeps everything.
+    """
+    rows, cols = A.shape
+    bs = block_size
+    if rows % bs or cols % bs:
+        raise ValueError(f"shape {A.shape} not divisible by block_size {bs}")
+    RB, CB = rows // bs, cols // bs
+    tiles = A.reshape(RB, bs, CB, bs).transpose(2, 0, 1, 3)  # (CB, RB, bs, bs)
+    live = np.abs(tiles).sum(axis=(2, 3)) > 0                # (CB, RB)
+    per_cb = live.sum(axis=1)
+    L = int(slots if slots is not None else max(int(per_cb.max(initial=1)), 1))
+    vals = np.zeros((CB, L, bs, bs), dtype=A.dtype)
+    idx = np.zeros((CB, L), dtype=np.int32)
+    nnzb = np.zeros((CB,), dtype=np.int32)
+    for cb in range(CB):
+        rbs = np.flatnonzero(live[cb])
+        if len(rbs) > L:  # keep largest-energy tiles
+            energy = np.abs(tiles[cb, rbs]).sum(axis=(1, 2))
+            rbs = rbs[np.argsort(-energy)[:L]]
+            rbs.sort()
+        take = len(rbs)
+        vals[cb, :take] = tiles[cb, rbs]
+        idx[cb, :take] = rbs
+        nnzb[cb] = take
+    return BlockELL(vals=vals, idx=idx, nnzb=nnzb, shape=(rows, cols),
+                    block_size=bs)
+
+
+def block_ell_to_dense(b: BlockELL) -> np.ndarray:
+    rows, cols = b.shape
+    bs = b.block_size
+    A = np.zeros((rows, cols), dtype=b.vals.dtype)
+    for cb in range(b.num_col_blocks):
+        for l in range(int(b.nnzb[cb])):
+            rb = int(b.idx[cb, l])
+            A[rb * bs:(rb + 1) * bs, cb * bs:(cb + 1) * bs] = b.vals[cb, l]
+    return A
+
+
+def block_density(A: np.ndarray, block_size: int = 8) -> float:
+    """Fraction of bs x bs tiles with any nonzero -- the quantity that
+    determines TPU sparse-matmul cost (not elementwise nnz)."""
+    rows, cols = A.shape
+    bs = block_size
+    RB, CB = rows // bs, cols // bs
+    tiles = A[: RB * bs, : CB * bs].reshape(RB, bs, CB, bs)
+    live = np.abs(tiles).sum(axis=(1, 3)) > 0
+    return float(live.mean())

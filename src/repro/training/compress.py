@@ -1,0 +1,82 @@
+"""Gradient compression: top-k sparsification + error feedback, with coded
+sparse aggregation.
+
+At 1000+ node scale the gradient all-reduce is DCN-bound across pods.  The
+standard mitigation is top-k sparsification with error feedback (the residual
+is carried into the next step, preserving convergence).  Sparsified gradients
+are exactly the regime the paper targets -- nnz << size -- so aggregating
+them through the (P, S)-sparse code gives pod-failure tolerance at
+O(nnz * ln(mn)) decode cost (``coded_aggregate`` simulates the pod-level
+protocol on host; on a real fleet each "row" is one pod's contribution over
+DCN).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.decoder import hybrid_decode
+from repro.core.encoder import SparseCodeSpec, generate_coefficient_matrix, make_tasks
+
+
+def topk_sparsify(tree, frac: float):
+    """Keep the top `frac` fraction of entries (by magnitude) per leaf.
+    Returns (sparse_tree, residual_tree)."""
+    def one(g):
+        flat = g.reshape(-1)
+        k = max(1, int(flat.size * frac))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        mask = (jnp.abs(g) >= thresh).astype(g.dtype)
+        return g * mask, g * (1 - mask)
+    kept, resid = [], []
+    leaves, treedef = jax.tree.flatten(tree)
+    for g in leaves:
+        a, b = one(g)
+        kept.append(a)
+        resid.append(b)
+    return jax.tree.unflatten(treedef, kept), jax.tree.unflatten(treedef, resid)
+
+
+def error_feedback_update(grads, residual, frac: float):
+    """grads + carried residual -> (compressed grads, new residual)."""
+    if residual is None:
+        residual = jax.tree.map(jnp.zeros_like, grads)
+    corrected = jax.tree.map(lambda g, r: g + r.astype(g.dtype), grads, residual)
+    return topk_sparsify(corrected, frac)
+
+
+def coded_aggregate(grad_shards: list[np.ndarray], *, m: int = 2, n: int = 2,
+                    num_workers: int | None = None, seed: int = 0,
+                    survivors: list[int] | None = None):
+    """Sum sparse gradient shards through the (P,S)-sparse code.
+
+    grad_shards: per-pod flat gradient vectors (the quantities a plain DCN
+    all-reduce would sum).  The sum is block-partitioned into mn pieces; each
+    of N aggregator nodes combines its assigned coded pieces; any full-rank
+    subset of aggregators reconstructs the sum.  Returns (summed_vector,
+    decode_stats).
+    """
+    total = np.sum(grad_shards, axis=0)  # what aggregators jointly compute
+    d = m * n
+    pad = (-len(total)) % d
+    padded = np.pad(total, (0, pad))
+    chunks = padded.reshape(d, -1)
+
+    N = num_workers or (d + 4)
+    spec = SparseCodeSpec(m=m, n=n, num_workers=N, seed=seed)
+    M = generate_coefficient_matrix(spec)
+    results = []
+    for task in make_tasks(M):
+        acc = np.zeros(chunks.shape[1], np.float32)
+        for c, w in zip(task.cols, task.weights):
+            acc += w * chunks[c]
+        results.append(acc)
+
+    rows = sorted(survivors) if survivors is not None else list(range(N))
+    blocks, stats = hybrid_decode(M[rows], [results[r] for r in rows])
+    out = np.concatenate(blocks)
+    if pad:
+        out = out[:-pad]
+    return out, stats

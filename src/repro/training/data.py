@@ -1,0 +1,77 @@
+"""Data pipeline: deterministic synthetic LM streams + stub modality inputs.
+
+Production shape: an infinite, shardable iterator of already-tokenized
+batches.  The synthetic stream is a fixed-seed Zipf-ish token process (cheap,
+deterministic, no I/O) -- the framework treats it exactly like a real corpus
+reader; swap `SyntheticCorpus` for a file-backed reader with the same
+interface to train on real data.  Modality frontends are STUBS per the
+assignment: `frames` / `vision` are precomputed embeddings drawn from the
+same deterministic stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticCorpus:
+    cfg: object                  # ArchConfig
+    batch: int
+    seq: int
+    seed: int = 0
+    dtype: object = np.float32   # embeddings dtype for stub modalities
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.make_batch(step)
+            step += 1
+
+    def make_batch(self, step: int) -> dict:
+        cfg = self.cfg
+        rng = np.random.default_rng(self.seed * 1_000_003 + step)
+        V = cfg.vocab_size
+        # Zipf-ish marginal so the loss has realistic structure
+        ranks = rng.zipf(1.3, size=(self.batch, self.seq + 1))
+        tokens_all = np.minimum(ranks, V - 1).astype(np.int32)
+        out = {
+            "tokens": tokens_all[:, :-1],
+            "labels": tokens_all[:, 1:],
+        }
+        if cfg.family == "encdec":
+            out["frames"] = rng.standard_normal(
+                (self.batch, cfg.encoder_seq, cfg.d_model)).astype(self.dtype) * 0.02
+        elif cfg.family == "vlm":
+            out["vision"] = rng.standard_normal(
+                (self.batch, cfg.vision_tokens, cfg.d_model)).astype(self.dtype) * 0.02
+        return out
+
+
+def input_specs(cfg, batch: int, seq: int, dtype="bfloat16", kind: str = "train"):
+    """ShapeDtypeStructs for every model input (dry-run stand-ins).
+
+    kind: train -> tokens+labels(+modality); prefill -> tokens(+modality);
+    decode -> one token (cache specs come from Model.init_cache shapes).
+    """
+    import jax.numpy as jnp
+
+    emb_dtype = jnp.dtype(dtype)
+    tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    if kind == "train":
+        out = {"tokens": tok, "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    elif kind == "prefill":
+        out = {"tokens": tok}
+    elif kind == "decode":
+        out = {"tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32)}
+    else:
+        raise ValueError(kind)
+    if kind != "decode":
+        if cfg.family == "encdec":
+            out["frames"] = jax.ShapeDtypeStruct((batch, cfg.encoder_seq, cfg.d_model), emb_dtype)
+        elif cfg.family == "vlm":
+            out["vision"] = jax.ShapeDtypeStruct((batch, cfg.vision_tokens, cfg.d_model), emb_dtype)
+    return out

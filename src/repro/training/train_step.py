@@ -1,0 +1,34 @@
+"""Train step factory: loss -> grads -> clip -> AdamW, one jittable function.
+
+The returned step is what the dry-run lowers and what train.py runs; its
+in/out shardings come from Model.specs() (params & optimizer state mirror
+each other: FSDP over 'data', TP over 'model', batch over ('pod','data')).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import AdamW, apply_updates, clip_by_global_norm
+
+
+def make_train_step(model, optimizer: AdamW, clip_norm: float = 1.0):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = {"loss": loss.astype(jnp.float32),
+                   "grad_norm": gnorm.astype(jnp.float32)}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model):
+    def eval_step(params, batch):
+        return model.loss(params, batch).astype(jnp.float32)
+    return eval_step

@@ -1,0 +1,69 @@
+import numpy as np
+import pytest
+
+from repro.core import degree as dg
+
+
+@pytest.mark.parametrize("d", [3, 4, 6, 16, 100, 1024])
+def test_wave_soliton_normalized(d):
+    p = dg.wave_soliton(d)
+    assert p.shape == (d,)
+    assert np.all(p >= 0)
+    assert np.isclose(p.sum(), 1.0, atol=1e-12)
+
+
+def test_wave_soliton_matches_paper_form():
+    d = 64
+    p = dg.wave_soliton(d)
+    tau = dg.WAVE_TAU
+    # Analytic normalization is exactly 1, so entries match eq. (7) directly.
+    assert np.isclose(p[0], tau / d, rtol=1e-9)
+    assert np.isclose(p[1], tau / 70.0, rtol=1e-9)
+    for k in (3, 10, 64):
+        assert np.isclose(p[k - 1], tau / (k * (k - 1)), rtol=1e-9)
+
+
+def test_wave_soliton_average_degree_is_log(  ):
+    # E[X] = Theta(tau ln d)  (Lemma 4)
+    for d in (64, 256, 1024):
+        avg = dg.average_degree(dg.wave_soliton(d))
+        assert 0.5 * np.log(d) < avg < 3.0 * np.log(d)
+
+
+@pytest.mark.parametrize("name", ["wave_soliton", "ideal_soliton", "robust_soliton", "optimized"])
+@pytest.mark.parametrize("d", [6, 16, 40])
+def test_all_distributions_valid(name, d):
+    p = dg.get_distribution(name, d)
+    assert p.shape == (d,)
+    assert np.isclose(p.sum(), 1.0)
+    assert np.all(p >= -1e-15)
+
+
+def test_table_iv_loaded():
+    for d in (6, 9, 12, 16, 25):
+        p = dg.optimized_distribution(d)
+        assert np.isclose(p.sum(), 1.0)
+        # Table IV average degrees: 2.01, 2.21, 2.78, 2.98, 3.54
+        expected = {6: 2.01, 9: 2.21, 12: 2.78, 16: 2.98, 25: 3.54}[d]
+        assert abs(dg.average_degree(p) - expected) < 0.05
+
+
+def test_sampling_bounds():
+    rng = np.random.default_rng(0)
+    p = dg.wave_soliton(32)
+    s = dg.sample_degrees(rng, p, 1000)
+    assert s.min() >= 1 and s.max() <= 32
+
+
+def test_generator_poly_derivative_consistent():
+    p = dg.wave_soliton(16)
+    xs = np.linspace(0.05, 0.95, 7)
+    eps = 1e-6
+    num = (dg.degree_generator_poly(p, xs + eps) - dg.degree_generator_poly(p, xs - eps)) / (2 * eps)
+    ana = dg.degree_generator_dpoly(p, xs)
+    np.testing.assert_allclose(num, ana, rtol=1e-5)
+
+
+def test_unknown_distribution_raises():
+    with pytest.raises(ValueError):
+        dg.get_distribution("nope", 8)

@@ -1,0 +1,154 @@
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.core import (
+    SparseCodeSpec,
+    generate_coefficient_matrix,
+    make_tasks,
+    encode_blocks,
+    hybrid_decode,
+    gaussian_decode,
+    peel_schedule,
+    apply_schedule,
+)
+from repro.core.decoder import DecodingError, decode_matrix
+from repro.core.encoder import split_blocks, compute_block_products
+
+
+def _random_sparse(rng, shape, density=0.05):
+    return sp.random(*shape, density=density, random_state=np.random.RandomState(rng.integers(2**31)), format="csr")
+
+
+def _setup(m=2, n=2, N=8, s=40, r=48, t=48, density=0.2, seed=0, **spec_kw):
+    rng = np.random.default_rng(seed)
+    A = np.round(rng.random((s, r)) * (rng.random((s, r)) < density) * 10)
+    B = np.round(rng.random((s, t)) * (rng.random((s, t)) < density) * 10)
+    spec = SparseCodeSpec(m=m, n=n, num_workers=N, seed=seed, **spec_kw)
+    M = generate_coefficient_matrix(spec)
+    tasks = make_tasks(M)
+    A_blocks = split_blocks(A, m)
+    B_blocks = split_blocks(B, n)
+    results = [encode_blocks(t_, A_blocks, B_blocks, n) for t_ in tasks]
+    C = A.T @ B
+    return spec, M, results, C, A_blocks, B_blocks
+
+
+def _assert_blocks_equal(blocks, C, m, n):
+    r, t = C.shape
+    br, bt = r // m, t // n
+    for i in range(m):
+        for j in range(n):
+            got = blocks[i * n + j]
+            if sp.issparse(got):
+                got = got.toarray()
+            np.testing.assert_allclose(got, C[i * br:(i + 1) * br, j * bt:(j + 1) * bt], atol=1e-6)
+
+
+def test_paper_motivating_example():
+    """Section III-A: the exact 6-worker, m=n=2 example from the paper."""
+    M = sp.csr_matrix(np.array([
+        [1, 1, 0, 0],   # C1 = A1B1 + A1B2
+        [0, 1, 1, 0],   # C2 = A1B2 + A2B1
+        [1, 0, 0, 0],   # C3 = A1B1
+        [0, 1, 0, 1],   # C4 = A1B2 + A2B2
+        [0, 0, 1, 1],   # C5 = A2B1 + A2B2
+        [1, 0, 1, 0],   # C6 = A1B1 + A2B1
+    ], dtype=float))
+    rng = np.random.default_rng(0)
+    blocks_true = [rng.random((3, 3)) for _ in range(4)]
+
+    # Case 1: workers {1,3,4,5} finish (0-indexed {0,2,3,4}) -> pure peeling.
+    rows = [0, 2, 3, 4]
+    results = [sum(M[r, c] * blocks_true[c] for c in range(4)) for r in rows]
+    blocks, stats = hybrid_decode(M[rows], results)
+    for got, want in zip(blocks, blocks_true):
+        np.testing.assert_allclose(got, want, atol=1e-12)
+    assert stats.roots == 0, "this case decodes by peeling alone (paper Fig 3a)"
+
+    # Case 2: workers {1,2,5,6} finish -> full rank but NO ripple: rooting.
+    rows = [0, 1, 4, 5]
+    results = [sum(M[r, c] * blocks_true[c] for c in range(4)) for r in rows]
+    blocks, stats = hybrid_decode(M[rows], results)
+    for got, want in zip(blocks, blocks_true):
+        np.testing.assert_allclose(got, want, atol=1e-10)
+    assert stats.roots >= 1, "paper Fig 3b requires a rooting step"
+
+
+@pytest.mark.parametrize("m,n", [(2, 2), (2, 3), (3, 3), (4, 4)])
+def test_hybrid_matches_gaussian(m, n):
+    spec, M, results, C, *_ = _setup(m=m, n=n, N=3 * m * n, seed=m * 10 + n)
+    # pick a random full-rank subset of rows of size ~ mn + 2
+    rng = np.random.default_rng(1)
+    d = m * n
+    for _ in range(5):
+        k = min(d + 2, M.shape[0])
+        rows = sorted(rng.choice(M.shape[0], size=k, replace=False))
+        sub = M[rows]
+        if np.linalg.matrix_rank(sub.toarray()) < d:
+            continue
+        data = [results[r] for r in rows]
+        blocks_h, stats = hybrid_decode(sub, data)
+        blocks_g = gaussian_decode(sub, data)
+        for bh, bg in zip(blocks_h, blocks_g):
+            np.testing.assert_allclose(bh, bg, atol=1e-6)
+        _assert_blocks_equal(blocks_h, C, m, n)
+        return
+    pytest.skip("no full-rank subset found (extremely unlikely)")
+
+
+def test_decode_recovers_exact_product():
+    spec, M, results, C, *_ = _setup(m=3, n=2, N=20, seed=3)
+    blocks, stats = hybrid_decode(M, results)
+    _assert_blocks_equal(blocks, C, 3, 2)
+    assert stats.peels + stats.roots == 6
+
+
+def test_sparse_blocks_stay_sparse_through_decode():
+    """Blocks as scipy.sparse: decode touches only sparse AXPYs."""
+    m = n = 2
+    rng = np.random.default_rng(0)
+    A = sp.random(60, 40, density=0.05, format="csc", random_state=np.random.RandomState(0))
+    B = sp.random(60, 44, density=0.05, format="csc", random_state=np.random.RandomState(1))
+    spec = SparseCodeSpec(m=m, n=n, num_workers=10, seed=1)
+    M = generate_coefficient_matrix(spec)
+    A_blocks = split_blocks(A, m)
+    B_blocks = split_blocks(B, n)
+    results = [encode_blocks(t, A_blocks, B_blocks, n) for t in make_tasks(M)]
+    blocks, _ = hybrid_decode(M, results)
+    C = (A.T @ B).toarray()
+    _assert_blocks_equal(blocks, C, m, n)
+    assert all(sp.issparse(b) for b in blocks)
+
+
+def test_rank_deficient_raises():
+    M = sp.csr_matrix(np.array([[1.0, 1.0], [2.0, 2.0], [3.0, 3.0]]))
+    with pytest.raises(DecodingError):
+        peel_schedule(M)
+
+
+def test_schedule_is_static_and_replayable():
+    spec, M, results, C, *_ = _setup(m=2, n=3, N=14, seed=7)
+    sched, stats = peel_schedule(M)
+    # replay twice on fresh copies; also on different data with same M
+    b1 = apply_schedule(sched, list(results))
+    b2 = apply_schedule(sched, list(results))
+    for x, y in zip(b1, b2):
+        np.testing.assert_allclose(x, y)
+    _assert_blocks_equal(b1, C, 2, 3)
+
+
+def test_decode_matrix_equivalence():
+    spec, M, results, C, *_ = _setup(m=2, n=2, N=9, seed=11)
+    D = decode_matrix(M)
+    stacked = np.stack([np.asarray(r) for r in results])
+    blocks = np.einsum("ck,kxy->cxy", D, stacked)
+    _assert_blocks_equal(list(blocks), C, 2, 2)
+
+
+def test_root_pick_heuristics_agree():
+    spec, M, results, C, *_ = _setup(m=3, n=3, N=30, seed=5)
+    b_rand, s_rand = hybrid_decode(M, results, root_pick="random")
+    b_max, s_max = hybrid_decode(M, results, root_pick="max_rows")
+    for x, y in zip(b_rand, b_max):
+        np.testing.assert_allclose(x, y, atol=1e-6)

@@ -1,0 +1,127 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp oracles,
+plus hypothesis property sweeps.  Kernels run in interpret mode on CPU."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.kernels import ops
+from repro.kernels.ref import coded_accum_ref, spmm_block_ref
+from repro.sparse import BlockELL, block_ell_to_dense, dense_to_block_ell
+
+SETTINGS = dict(max_examples=10, deadline=None,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+# ----------------------------- coded_accum --------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,n,s,r,t,L", [
+    (2, 2, 128, 16, 24, 3),
+    (2, 2, 256, 32, 32, 5),
+    (4, 2, 128, 32, 16, 7),
+    (1, 4, 128, 8, 32, 2),
+    (3, 3, 384, 24, 36, 4),
+])
+def test_coded_accum_sweep(dtype, m, n, s, r, t, L):
+    rng = np.random.default_rng(hash((m, n, s, r, t, L)) % 2**31)
+    A = jnp.asarray(rng.standard_normal((s, r)), dtype)
+    B = jnp.asarray(rng.standard_normal((s, t)), dtype)
+    cols = jnp.asarray(rng.integers(0, m * n, size=L), jnp.int32)
+    w = rng.standard_normal(L).astype(np.float32)
+    w[-1] = 0.0  # exercise padding semantics
+    w = jnp.asarray(w)
+    got = ops.coded_accum(A, B, cols, w, m=m, n=n, s_chunk=128)
+    want = coded_accum_ref(A, B, cols, w, m=m, n=n)
+    atol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=atol, rtol=1e-2)
+
+
+@given(data=st.data())
+@settings(**SETTINGS)
+def test_coded_accum_property(data):
+    m = data.draw(st.integers(1, 3))
+    n = data.draw(st.integers(1, 3))
+    L = data.draw(st.integers(1, 6))
+    s = 128 * data.draw(st.integers(1, 2))
+    br = 8 * data.draw(st.integers(1, 3))
+    bt = 8 * data.draw(st.integers(1, 3))
+    seed = data.draw(st.integers(0, 10_000))
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.standard_normal((s, m * br)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((s, n * bt)), jnp.float32)
+    cols = jnp.asarray(rng.integers(0, m * n, size=L), jnp.int32)
+    w = jnp.asarray(rng.standard_normal(L), jnp.float32)
+    got = ops.coded_accum(A, B, cols, w, m=m, n=n)
+    want = coded_accum_ref(A, B, cols, w, m=m, n=n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-3, rtol=1e-3)
+
+
+# ----------------------------- spmm_block ---------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bs,RB,CB,t,density", [
+    (8, 4, 4, 128, 0.3),
+    (8, 8, 2, 256, 0.1),
+    (16, 4, 4, 128, 0.5),
+    (8, 2, 8, 128, 0.9),
+])
+def test_spmm_block_sweep(dtype, bs, RB, CB, t, density):
+    rng = np.random.default_rng(hash((bs, RB, CB, t)) % 2**31)
+    # build a block-sparse A directly
+    mask = rng.random((RB, CB)) < density
+    A = rng.standard_normal((RB * bs, CB * bs)) * np.kron(mask, np.ones((bs, bs)))
+    ell = dense_to_block_ell(A, block_size=bs)
+    B = jnp.asarray(rng.standard_normal((RB * bs, t)), dtype)
+    vals = jnp.asarray(ell.vals, dtype)
+    idx = jnp.asarray(ell.idx)
+    got = ops.spmm_block(vals, idx, B, t_tile=128)
+    want = spmm_block_ref(vals, idx, B, out_rows=CB * bs)
+    atol = 2e-1 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=atol, rtol=1e-2)
+    # and against the dense oracle via the format round-trip
+    dense = block_ell_to_dense(ell)
+    want_dense = dense.T @ np.asarray(B, np.float64)
+    np.testing.assert_allclose(np.asarray(got), want_dense,
+                               atol=atol * 10, rtol=5e-2)
+
+
+@given(data=st.data())
+@settings(**SETTINGS)
+def test_spmm_block_property(data):
+    bs = data.draw(st.sampled_from([8, 16]))
+    RB = data.draw(st.integers(1, 4))
+    CB = data.draw(st.integers(1, 4))
+    t = 128
+    density = data.draw(st.floats(0.0, 1.0))
+    seed = data.draw(st.integers(0, 10_000))
+    rng = np.random.default_rng(seed)
+    mask = rng.random((RB, CB)) < density
+    A = rng.standard_normal((RB * bs, CB * bs)) * np.kron(mask, np.ones((bs, bs)))
+    ell = dense_to_block_ell(A, block_size=bs)
+    B = jnp.asarray(rng.standard_normal((RB * bs, t)), jnp.float32)
+    got = ops.spmm_block(jnp.asarray(ell.vals, jnp.float32), jnp.asarray(ell.idx), B)
+    want = np.asarray(block_ell_to_dense(ell)).T @ np.asarray(B)
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-3, rtol=1e-3)
+
+
+# ------------------------- format round-trips ------------------------------
+
+@given(data=st.data())
+@settings(**SETTINGS)
+def test_block_ell_roundtrip(data):
+    bs = data.draw(st.sampled_from([4, 8]))
+    RB = data.draw(st.integers(1, 5))
+    CB = data.draw(st.integers(1, 5))
+    density = data.draw(st.floats(0.0, 1.0))
+    seed = data.draw(st.integers(0, 10_000))
+    rng = np.random.default_rng(seed)
+    mask = rng.random((RB, CB)) < density
+    A = rng.standard_normal((RB * bs, CB * bs)) * np.kron(mask, np.ones((bs, bs)))
+    ell = dense_to_block_ell(A, block_size=bs)
+    np.testing.assert_array_equal(block_ell_to_dense(ell), A)

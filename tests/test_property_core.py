@@ -1,0 +1,141 @@
+"""Property-based tests (hypothesis) for the sparse code's invariants.
+
+Invariants:
+  P1  decode(encode(blocks)) == blocks for ANY full-rank collected subset,
+      any (m, n), any degree distribution, any weight set.
+  P2  hybrid decode == Gaussian-elimination oracle on the same rows.
+  P3  the structural schedule replays correctly on fresh data (schedule is
+      data-independent).
+  P4  decode cost scales with nnz: axpy count <= nnz(M) and every op touches
+      exactly one block.
+  P5  integer inputs + integer weights => bit-exact recovery (no float drift
+      through peeling).
+"""
+
+import numpy as np
+import pytest
+import scipy.sparse as sp
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.core import (
+    SparseCodeSpec,
+    generate_coefficient_matrix,
+    make_tasks,
+    encode_blocks,
+    hybrid_decode,
+    gaussian_decode,
+    peel_schedule,
+    apply_schedule,
+)
+from repro.core.encoder import split_blocks
+
+SETTINGS = dict(
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+@st.composite
+def code_instances(draw):
+    m = draw(st.integers(1, 4))
+    n = draw(st.integers(1, 4))
+    d = m * n
+    extra = draw(st.integers(2, 8))
+    dist = draw(st.sampled_from(["wave_soliton", "robust_soliton", "optimized"]))
+    wkind = draw(st.sampled_from(["paper", "symmetric"]))
+    seed = draw(st.integers(0, 10_000))
+    spec = SparseCodeSpec(m=m, n=n, num_workers=d + extra,
+                          distribution=dist, weight_kind=wkind, seed=seed)
+    return spec
+
+
+@given(spec=code_instances(), data=st.data())
+@settings(**SETTINGS)
+def test_p1_p2_decode_inverts_encode_any_full_rank_subset(spec, data):
+    rng = np.random.default_rng(spec.seed + 1)
+    M = generate_coefficient_matrix(spec)
+    d = spec.mn
+    blocks_true = [np.round(rng.random((3, 4)) * 8) for _ in range(d)]
+    Md = M.toarray()
+    results = [
+        sum(Md[r, c] * blocks_true[c] for c in range(d) if Md[r, c] != 0.0)
+        if Md[r].any() else np.zeros((3, 4))
+        for r in range(M.shape[0])
+    ]
+    # random subset containing at least mn rows
+    k = data.draw(st.integers(d, M.shape[0]))
+    rows = sorted(rng.choice(M.shape[0], size=k, replace=False).tolist())
+    sub = M[rows]
+    if np.linalg.matrix_rank(sub.toarray()) < d:
+        return  # not decodable; nothing to assert (P1 is about full-rank sets)
+    data_rows = [results[r] for r in rows]
+    got, stats = hybrid_decode(sub, data_rows)
+    for g, t in zip(got, blocks_true):
+        np.testing.assert_allclose(g, t, atol=1e-5)
+    oracle = gaussian_decode(sub, data_rows)
+    for g, o in zip(got, oracle):
+        np.testing.assert_allclose(g, o, atol=1e-5)
+    assert stats.peels + stats.roots == d
+
+
+@given(spec=code_instances())
+@settings(**SETTINGS)
+def test_p3_schedule_data_independence(spec):
+    rng = np.random.default_rng(spec.seed + 2)
+    M = generate_coefficient_matrix(spec)
+    d = spec.mn
+    if np.linalg.matrix_rank(M.toarray()) < d:
+        return
+    sched, _ = peel_schedule(M)
+    for trial in range(2):
+        blocks_true = [rng.standard_normal((2, 3)) for _ in range(d)]
+        Md = M.toarray()
+        results = [
+            sum(Md[r, c] * blocks_true[c] for c in range(d) if Md[r, c] != 0.0)
+            if Md[r].any() else np.zeros((2, 3))
+            for r in range(M.shape[0])
+        ]
+        got = apply_schedule(sched, results)
+        for g, t in zip(got, blocks_true):
+            np.testing.assert_allclose(g, t, atol=1e-6)
+
+
+@given(spec=code_instances())
+@settings(**SETTINGS)
+def test_p4_axpy_count_bounded_by_nnz(spec):
+    M = generate_coefficient_matrix(spec)
+    if np.linalg.matrix_rank(M.toarray()) < spec.mn:
+        return
+    sched, stats = peel_schedule(M)
+    # every nonzero of M is consumed by at most one axpy or one peel/root
+    assert stats.axpys <= M.nnz
+    assert stats.peels + stats.roots == spec.mn
+
+
+@given(st.integers(0, 5000))
+@settings(**SETTINGS)
+def test_p5_integer_exactness(seed):
+    """Integer matrices + integer weights decode bit-exactly through peeling."""
+    rng = np.random.default_rng(seed)
+    m = n = 2
+    spec = SparseCodeSpec(m=m, n=n, num_workers=10, seed=seed)
+    M = generate_coefficient_matrix(spec)
+    if np.linalg.matrix_rank(M.toarray()) < 4:
+        return
+    A = rng.integers(0, 4, size=(20, 8)).astype(np.float64)
+    B = rng.integers(0, 4, size=(20, 12)).astype(np.float64)
+    A_blocks = split_blocks(A, m)
+    B_blocks = split_blocks(B, n)
+    results = [encode_blocks(t, A_blocks, B_blocks, n) for t in make_tasks(M)]
+    got, stats = hybrid_decode(M, results)
+    C = A.T @ B
+    br, bt = C.shape[0] // m, C.shape[1] // n
+    for i in range(m):
+        for j in range(n):
+            want = C[i * br:(i + 1) * br, j * bt:(j + 1) * bt]
+            if stats.roots == 0:
+                # pure peeling on integers: exact to the bit
+                np.testing.assert_array_equal(got[i * n + j], want)
+            else:
+                np.testing.assert_allclose(got[i * n + j], want, atol=1e-6)

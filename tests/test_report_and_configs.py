@@ -1,0 +1,82 @@
+import dataclasses
+
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.configs.base import ArchConfig
+
+
+def test_all_ten_archs_registered():
+    expected = {
+        "whisper-medium", "rwkv6-3b", "llama-3.2-vision-11b", "dbrx-132b",
+        "qwen3-moe-30b-a3b", "internlm2-1.8b", "starcoder2-7b",
+        "command-r-35b", "qwen2-7b", "jamba-1.5-large-398b",
+    }
+    assert expected <= set(configs.ARCHS)
+
+
+def test_param_counts_match_public_scale():
+    """Sanity: analytic parameter counts land near the published sizes."""
+    expect = {
+        "internlm2-1.8b": (1.5e9, 2.5e9),
+        "qwen2-7b": (6e9, 9e9),
+        "starcoder2-7b": (6e9, 9e9),
+        "llama-3.2-vision-11b": (8e9, 13e9),
+        "command-r-35b": (27e9, 40e9),  # 30.3B with the assigned ff/tied-embed
+        "dbrx-132b": (110e9, 145e9),
+        "qwen3-moe-30b-a3b": (25e9, 36e9),
+        "jamba-1.5-large-398b": (330e9, 440e9),
+        "rwkv6-3b": (2e9, 4e9),
+        "whisper-medium": (0.5e9, 0.9e9),  # enc-dec with untied 51865 vocab
+    }
+    for name, (lo, hi) in expect.items():
+        n = configs.get(name).params_count()
+        assert lo < n < hi, f"{name}: {n:,} outside [{lo:,}, {hi:,}]"
+
+
+def test_moe_active_params_below_total():
+    for name in ("dbrx-132b", "qwen3-moe-30b-a3b", "jamba-1.5-large-398b"):
+        cfg = configs.get(name)
+        assert cfg.active_params_count() < 0.6 * cfg.params_count()
+
+
+def test_layer_plans():
+    jamba = configs.get("jamba-1.5-large-398b")
+    plan = jamba.layer_plan()
+    assert len(plan) == 8
+    assert sum(1 for m, _ in plan if m == "attn") == 1
+    assert plan[4][0] == "attn"  # attn_layer_offset = 4
+    assert sum(1 for _, f in plan if f == "moe") == 4  # every other layer
+
+    vlm = configs.get("llama-3.2-vision-11b")
+    plan = vlm.layer_plan()
+    assert sum(1 for m, _ in plan if m == "cross") == 1
+    assert len(plan) == 5
+
+    rwkv = configs.get("rwkv6-3b")
+    assert all(m == "rwkv" for m, _ in rwkv.layer_plan())
+
+
+def test_with_opts_validation():
+    cfg = configs.get("internlm2-1.8b")
+    c2 = cfg.with_opts(("fused_ce", "onehot_cache"))
+    assert c2.opt_fused_ce and c2.opt_onehot_cache and not c2.opt_seq_parallel
+    with pytest.raises(ValueError):
+        cfg.with_opts(("not_a_real_opt",))
+
+
+def test_reduced_configs_are_small():
+    for name in configs.ARCHS:
+        r = configs.get(name).reduced()
+        assert r.params_count() < 5e7, name
+        assert r.num_layers <= 16
+
+
+def test_report_tables_render():
+    from repro.launch.report import dryrun_table, perf_table, roofline_table
+    d = dryrun_table()
+    assert d.count("|") > 50
+    r = roofline_table()
+    assert "dominant" in r or "arch" in r
+    perf_table()  # renders without error even if variants are sparse

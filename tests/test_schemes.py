@@ -1,0 +1,99 @@
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.core import schemes
+
+
+def _true_blocks(rng, d, shape=(4, 5)):
+    return [rng.random(shape) for _ in range(d)]
+
+
+def _results_for(code, blocks):
+    """Compute every row's result exactly from the generator matrix."""
+    M = code.M.toarray()
+    return {
+        r: sum(M[r, c] * blocks[c] for c in range(code.mn) if M[r, c] != 0.0)
+        for r in range(M.shape[0])
+    }
+
+
+@pytest.mark.parametrize("name", ["uncoded", "sparse_code", "lt_code", "sparse_mds",
+                                  "polynomial", "mds", "product"])
+def test_scheme_end_to_end(name):
+    m, n, N = 2, 3, 18
+    rng = np.random.default_rng(42)
+    ctor = schemes.SCHEMES[name]
+    code = ctor(m, n) if name == "uncoded" else ctor(m, n, N)
+    d = m * n
+    blocks = _true_blocks(rng, d)
+    results = _results_for(code, blocks)
+
+    # find a decodable prefix of workers (straggler-free order here)
+    workers = list(range(code.num_workers))
+    for k in range(1, code.num_workers + 1):
+        if code.can_decode(workers[:k]):
+            got = code.decode(workers[:k], results)
+            for g, w in zip(got, blocks):
+                np.testing.assert_allclose(np.asarray(g), w, atol=1e-6)
+            return
+    pytest.fail(f"{name} never became decodable with all workers")
+
+
+def test_uncoded_needs_all_workers():
+    code = schemes.uncoded(2, 2)
+    assert not code.can_decode([0, 1, 2])
+    assert code.can_decode([0, 1, 2, 3])
+
+
+def test_mds_threshold_is_m_workers():
+    m, n = 3, 2
+    code = schemes.mds_code(m, n, N=6, seed=0)
+    assert not code.can_decode([0, 1])
+    assert code.can_decode([0, 1, 2])      # any m workers
+    assert code.can_decode([3, 4, 5])
+
+
+def test_polynomial_threshold_exactly_mn():
+    m, n = 2, 2
+    code = schemes.polynomial_code(m, n, N=8)
+    rng = np.random.default_rng(0)
+    # any mn rows of the generalized Vandermonde are full rank
+    for _ in range(5):
+        rows = sorted(rng.choice(8, size=4, replace=False).tolist())
+        assert code.can_decode(rows)
+    assert not code.can_decode([0, 1, 2])
+
+
+def test_polynomial_cost_factor_is_mn():
+    code = schemes.polynomial_code(3, 4, N=15)
+    assert np.all(code.cost_factor == 12.0)
+
+
+def test_sparse_code_cost_is_row_degree():
+    code = schemes.sparse_code(3, 3, N=30, seed=1)
+    deg = np.diff(code.M.indptr)
+    np.testing.assert_array_equal(code.cost_factor, deg)
+    # Wave soliton average degree ~ tau*ln(mn): far below polynomial's mn=9
+    assert code.cost_factor.mean() < 6.0
+
+
+def test_product_code_is_kronecker():
+    code = schemes.product_code(2, 2, N=9, seed=0)
+    assert code.M.shape[1] == 4
+    assert code.num_workers <= 9
+
+
+def test_lt_code_peel_only_decode():
+    rng = np.random.default_rng(3)
+    code = schemes.lt_code(2, 2, N=24, seed=3)
+    blocks = _true_blocks(rng, 4)
+    results = _results_for(code, blocks)
+    workers = list(range(code.num_workers))
+    for k in range(4, code.num_workers + 1):
+        if code.can_decode(workers[:k]):
+            got = code.decode(workers[:k], results)
+            for g, w in zip(got, blocks):
+                np.testing.assert_allclose(g, w, atol=1e-8)
+            return
+    pytest.skip("LT failed to peel with N=24 (rare but possible)")

@@ -1,0 +1,55 @@
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.models import build
+from repro.serving.serve_step import generate, make_decode_step, make_prefill_step
+from repro.training.data import SyntheticCorpus, input_specs
+
+
+def test_generate_greedy_deterministic():
+    cfg = configs.get("internlm2-1.8b").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.key(0), jnp.float32)
+    prompt = jnp.asarray(
+        SyntheticCorpus(cfg, 2, 8, seed=0).make_batch(0)["tokens"])
+    out1 = generate(model, params, prompt, steps=5, max_seq=16,
+                    cache_dtype=jnp.float32)
+    out2 = generate(model, params, prompt, steps=5, max_seq=16,
+                    cache_dtype=jnp.float32)
+    assert out1.shape == (2, 5)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert out1.dtype == jnp.int32
+    assert int(out1.min()) >= 0 and int(out1.max()) < cfg.vocab_size
+
+
+def test_temperature_sampling_uses_rng():
+    cfg = configs.get("internlm2-1.8b").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.key(1), jnp.float32)
+    prompt = jnp.asarray(
+        SyntheticCorpus(cfg, 1, 8, seed=1).make_batch(0)["tokens"])
+    outs = [np.asarray(generate(model, params, prompt, steps=8, max_seq=20,
+                                temperature=2.0, rng=jax.random.key(s),
+                                cache_dtype=jnp.float32)) for s in (0, 1)]
+    assert not np.array_equal(outs[0], outs[1]), "different rng, different text"
+
+
+@pytest.mark.parametrize("name,kind,extra", [
+    ("internlm2-1.8b", "train", None),
+    ("whisper-medium", "train", "frames"),
+    ("llama-3.2-vision-11b", "prefill", "vision"),
+    ("qwen3-moe-30b-a3b", "decode", None),
+])
+def test_input_specs_cover_model_inputs(name, kind, extra):
+    cfg = configs.get(name)
+    spec = input_specs(cfg, batch=4, seq=64, kind=kind)
+    assert spec["tokens"].shape == ((4, 64) if kind != "decode" else (4, 1))
+    if extra and kind != "decode":
+        assert extra in spec
+        assert spec[extra].shape[0] == 4
+    if kind == "train":
+        assert spec["labels"].shape == (4, 64)

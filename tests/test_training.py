@@ -1,0 +1,129 @@
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.models import build
+from repro.training import checkpoint as ckpt_lib
+from repro.training.compress import coded_aggregate, error_feedback_update
+from repro.training.data import SyntheticCorpus
+from repro.training.optimizer import (
+    AdamW,
+    apply_updates,
+    clip_by_global_norm,
+    cosine_warmup_schedule,
+    global_norm,
+)
+from repro.training.train_step import make_train_step
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    cfg = configs.get("internlm2-1.8b").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.key(0), jnp.float32)
+    batch = {k: jnp.asarray(v)
+             for k, v in SyntheticCorpus(cfg, 2, 16, seed=0).make_batch(0).items()}
+    return cfg, model, params, batch
+
+
+def test_train_loss_decreases(small_setup):
+    cfg, model, params, batch = small_setup
+    opt = AdamW(lr=1e-2)
+    step = jax.jit(make_train_step(model, opt))
+    opt_state = opt.init(params)
+    losses = []
+    for i in range(12):
+        params, opt_state, metrics = step(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] * 0.9, losses
+
+
+def test_adamw_bf16_state(small_setup):
+    cfg, model, params, batch = small_setup
+    opt = AdamW(lr=1e-3, state_dtype=jnp.bfloat16)
+    opt_state = opt.init(params)
+    assert all(m.dtype == jnp.bfloat16 for m in jax.tree.leaves(opt_state["m"]))
+    step = jax.jit(make_train_step(model, opt))
+    params2, opt_state, metrics = step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones((10,)) * 3.0, "b": jnp.ones((5,)) * 4.0}
+    clipped, gn = clip_by_global_norm(tree, 1.0)
+    assert float(gn) > 1.0
+    assert np.isclose(float(global_norm(clipped)), 1.0, atol=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_warmup_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert np.isclose(float(lr(jnp.int32(10))), 1e-3, rtol=1e-5)
+    assert float(lr(jnp.int32(100))) < 2e-4 + 1e-9
+
+
+def test_checkpoint_roundtrip(tmp_path, small_setup):
+    cfg, model, params, batch = small_setup
+    opt = AdamW(lr=1e-3)
+    opt_state = opt.init(params)
+    ckpt_lib.save_checkpoint(tmp_path, 7, params, opt_state)
+    assert ckpt_lib.latest_step(tmp_path) == 7
+    p2, o2, step = ckpt_lib.restore_checkpoint(tmp_path, params, opt_state)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_coded_checkpoint_restores_with_losses(tmp_path, small_setup):
+    cfg, model, params, _ = small_setup
+    manifest = ckpt_lib.save_coded_checkpoint(tmp_path, 3, params, m=2, n=2,
+                                              num_targets=10)
+    # kill 3 of 10 storage targets; restore must still succeed
+    available = [0, 2, 3, 5, 6, 8, 9]
+    restored, stats = ckpt_lib.restore_coded_checkpoint(tmp_path, 3, params,
+                                                        available=available)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-4)
+    assert stats.peels + stats.roots == 4
+
+
+def test_coded_checkpoint_refuses_when_rank_lost(tmp_path, small_setup):
+    cfg, model, params, _ = small_setup
+    from repro.core.decoder import DecodingError
+    ckpt_lib.save_coded_checkpoint(tmp_path, 4, params, m=2, n=2, num_targets=8)
+    with pytest.raises((DecodingError, ValueError)):
+        ckpt_lib.restore_coded_checkpoint(tmp_path, 4, params, available=[0])
+
+
+def test_error_feedback_compression_converges():
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)}
+    resid = None
+    total_sent = jax.tree.map(jnp.zeros_like, g)
+    for _ in range(30):
+        sent, resid = error_feedback_update(g, resid, frac=0.1)
+        total_sent = jax.tree.map(lambda t, s: t + s, total_sent, sent)
+        nnz_frac = float(jnp.mean(sent["w"] != 0))
+        assert nnz_frac <= 0.11
+    # error feedback: cumulative transmitted mass approaches 30 * g
+    ratio = float(jnp.linalg.norm(total_sent["w"]) / (30 * jnp.linalg.norm(g["w"])))
+    assert ratio > 0.8
+
+
+def test_coded_aggregate_exact_and_fault_tolerant():
+    rng = np.random.default_rng(1)
+    shards = [np.zeros(1000, np.float32) for _ in range(4)]
+    for s in shards:  # sparse gradients
+        idx = rng.choice(1000, size=50, replace=False)
+        s[idx] = rng.standard_normal(50)
+    want = np.sum(shards, axis=0)
+    got, stats = coded_aggregate(shards, m=2, n=2, num_workers=8)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+    # kill two aggregators
+    got2, _ = coded_aggregate(shards, m=2, n=2, num_workers=8,
+                              survivors=[0, 1, 3, 4, 6, 7])
+    np.testing.assert_allclose(got2, want, atol=1e-5)
