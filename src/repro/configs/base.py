@@ -75,6 +75,17 @@ class ArchConfig:
     opt_moe_shardmap_combine: bool = False  # hand-written shard_map MoE
     #   combine: sum each expert shard's contributions locally, psum ONE
     #   (Tl, d) bf16 tensor (vs GSPMD's (Tl*k, d) f32 gather-AR)
+    coded_backend: str = "dense_scan"  # local-compute backend for the coded
+    #   matmul device path (repro.core.coded_matmul.BACKENDS):
+    #   "dense_scan" = einsum over padded task slots; "block_sparse" =
+    #   per-worker packed tiles through the kernels.spmm_block Pallas kernel
+    #   (compute scales with live tiles, not dense dims)
+
+    def __post_init__(self):
+        if self.coded_backend not in ("dense_scan", "block_sparse"):
+            raise ValueError(
+                f"coded_backend {self.coded_backend!r}; expected "
+                "'dense_scan' or 'block_sparse'")
 
     def with_opts(self, names) -> "ArchConfig":
         valid = {"fused_ce", "moe_local_dispatch", "onehot_cache",

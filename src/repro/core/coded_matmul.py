@@ -4,12 +4,23 @@ Maps the paper's master/worker protocol onto an SPMD mesh axis:
 
 * worker k  = device k on the ``workers`` mesh axis (N devices);
 * its task  = row k of the coefficient matrix M (sampled on host, static);
-* local compute = sum_{l} w_kl * A_{i_l}^T B_{j_l}, evaluated as a
-  lax.scan over the (padded) task slots -- exactly `degree` block products;
+* local compute = sum_{l} w_kl * A_{i_l}^T B_{j_l}, via a pluggable backend
+  (see ``coded_matmul``'s ``backend`` argument);
 * decode    = blocks = D @ C~  with D = pinv(M) precomputed on host, executed
   as one psum over the axis (decoding a full-rank linear code is linear, so
   on-device it collapses to a single fused contraction; the peeling/rooting
   schedule is the *host* decode used by the runtime layer).
+
+Local-compute backends:
+
+* ``"dense_scan"``   -- einsum over the (padded) task slots as a lax.scan:
+  exactly ``max_degree`` dense block products per worker.  Cost scales with
+  the dense block dims regardless of sparsity.
+* ``"block_sparse"`` -- A is packed host-side into per-worker block-ELL
+  stripes (``pack_worker_tiles``) and the local product dispatches the
+  ``repro.kernels.spmm_block`` Pallas kernel, so local compute and HBM
+  traffic scale with the number of LIVE tiles -- the paper's
+  nnz-proportional claim (Theorem 1) on the device path.
 
 TPU adaptation notes (DESIGN.md section 3):
   - SPMD lockstep means every device pays for the *maximum* degree in the
@@ -27,7 +38,6 @@ TPU adaptation notes (DESIGN.md section 3):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -35,8 +45,13 @@ import numpy as np
 import scipy.sparse as sp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.decoder import decode_matrix
+from repro import compat
+from repro.core.decoder import DecodingError, decode_matrix
 from repro.core.encoder import SparseCodeSpec, generate_coefficient_matrix
+from repro.kernels import ops
+from repro.sparse.blocksparse import BlockELL, dense_to_block_ell
+
+BACKENDS = ("dense_scan", "block_sparse")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,22 +76,40 @@ class CodedMatmulPlan:
     def num_workers(self) -> int:
         return self.spec.num_workers
 
+    def coefficient_matrix(self) -> np.ndarray:
+        """Dense M (N, mn) reconstructed from the padded task table.
+
+        Padded slots carry weight 0.0 and contribute nothing (they land on
+        block id 0 but add zero).
+        """
+        M = np.zeros((self.num_workers, self.m * self.n), dtype=np.float64)
+        rows = np.repeat(np.arange(self.num_workers), self.cols.shape[1])
+        np.add.at(M, (rows, self.cols.reshape(-1).astype(np.int64)),
+                  self.weights.reshape(-1).astype(np.float64))
+        return M
+
     def with_survivors(self, survivors: np.ndarray) -> "CodedMatmulPlan":
         """Re-derive the decode matrix using only surviving workers' rows.
 
         survivors: boolean mask (N,).  Requires the surviving submatrix to be
-        full column rank (Theorem 2 says w.h.p. it is once >= ~mn survive).
+        full column rank (Theorem 2 says w.h.p. it is once >= ~mn survive);
+        raises ``DecodingError`` (a ValueError subclass) otherwise.
         """
-        M = np.zeros((self.num_workers, self.m * self.n))
-        for k in range(self.num_workers):
-            for l in range(self.max_degree):
-                if self.weights[k, l] != 0.0:
-                    M[k, self.cols[k, l]] += self.weights[k, l]
-        M_surv = M * survivors[:, None]
-        if np.linalg.matrix_rank(M_surv) < self.m * self.n:
+        survivors = np.asarray(survivors, dtype=bool).reshape(-1)
+        if survivors.shape[0] != self.num_workers:
             raise ValueError(
-                f"only {int(survivors.sum())}/{self.num_workers} survivors; "
-                "coefficient matrix lost full rank -- cannot decode")
+                f"survivors mask has {survivors.shape[0]} entries for "
+                f"{self.num_workers} workers")
+        if survivors.all():
+            return self
+        d = self.m * self.n
+        M_surv = self.coefficient_matrix() * survivors[:, None]
+        rank = int(np.linalg.matrix_rank(M_surv))
+        if rank < d:
+            raise DecodingError(
+                f"only {int(survivors.sum())}/{self.num_workers} survivors: "
+                f"surviving coefficient rows have rank {rank} < {d} -- cannot "
+                "decode; any full-column-rank subset would do (Theorem 2)")
         D = np.linalg.pinv(M_surv)
         return dataclasses.replace(self, decode=D.astype(np.float32))
 
@@ -124,7 +157,9 @@ def make_plan(
     raise RuntimeError(f"no full-rank coefficient matrix after {max_resample} tries")
 
 
-def _local_coded_product(A, B, cols_k, w_k, m: int, n: int):
+# ------------------------- local-compute backends ---------------------------
+
+def _local_dense_scan(A, B, cols_k, w_k, m: int, n: int):
     """One worker's combination: sum_l w_l A_{i_l}^T B_{j_l} (scan over slots)."""
     s, r = A.shape
     _, t = B.shape
@@ -145,6 +180,72 @@ def _local_coded_product(A, B, cols_k, w_k, m: int, n: int):
     return acc
 
 
+@dataclasses.dataclass(frozen=True)
+class WorkerTilePack:
+    """Per-worker block-ELL stripes of the *stacked* sparse operand.
+
+    Worker k's local product sum_l w_kl A_{i_l}^T B_{j_l} is one SpMM
+    A_k^T B_k with A_k = vstack_l(A_{i_l}) of shape (L*s, br) and
+    B_k = vstack_l(w_kl B_{j_l}) assembled on device.  ``vals``/``idx`` are
+    A_k's packed tiles for every worker (the spmm_block kernel layout):
+
+      vals : (N, br/bs, Lw, bs, bs)   live tiles, zero-padded to Lw slots
+      idx  : (N, br/bs, Lw)           source row-block index into (L*s)/bs
+
+    Weights are NOT folded into the tiles -- they scale the B stack instead,
+    so one pack serves any survivor mask.
+    """
+
+    vals: np.ndarray
+    idx: np.ndarray
+    block_size: int
+    live_tiles: np.ndarray  # (N,) total live tiles per worker (cost proxy)
+
+
+def pack_worker_tiles(a_sparse: BlockELL, plan: CodedMatmulPlan) -> WorkerTilePack:
+    """Re-stripe A's global block-ELL into per-worker stacked-operand tiles."""
+    s, r = a_sparse.shape
+    bs = a_sparse.block_size
+    m, n = plan.m, plan.n
+    if r % m:
+        raise ValueError(f"A cols {r} not divisible by m={m}")
+    br = r // m
+    if br % bs or s % bs:
+        raise ValueError(
+            f"block partition ({br} x {s}) not divisible by block_size {bs}")
+    CBl = br // bs            # column blocks per worker output row-block
+    RBs = s // bs             # row blocks per stacked segment
+    N, L = plan.cols.shape
+
+    per: list[list[list[tuple[int, np.ndarray]]]] = [
+        [[] for _ in range(CBl)] for _ in range(N)]
+    for k in range(N):
+        for l in range(L):
+            if plan.weights[k, l] == 0.0:
+                continue      # padded slot: no tiles, B segment is zeroed
+            i = int(plan.cols[k, l]) // n
+            for cb in range(CBl):
+                g = i * CBl + cb
+                for e in range(int(a_sparse.nnzb[g])):
+                    per[k][cb].append(
+                        (l * RBs + int(a_sparse.idx[g, e]), a_sparse.vals[g, e]))
+
+    Lw = max(1, max((len(per[k][cb]) for k in range(N) for cb in range(CBl)),
+                    default=1))
+    vals = np.zeros((N, CBl, Lw, bs, bs), dtype=np.float32)
+    idx = np.zeros((N, CBl, Lw), dtype=np.int32)
+    live = np.zeros((N,), dtype=np.int64)
+    for k in range(N):
+        for cb in range(CBl):
+            for slot, (src, tile) in enumerate(per[k][cb]):
+                vals[k, cb, slot] = tile
+                idx[k, cb, slot] = src
+            live[k] += len(per[k][cb])
+    return WorkerTilePack(vals=vals, idx=idx, block_size=bs, live_tiles=live)
+
+
+# ------------------------------- entry point --------------------------------
+
 def coded_matmul(
     A: jax.Array,
     B: jax.Array,
@@ -153,39 +254,80 @@ def coded_matmul(
     axis_name: str = "model",
     survivors: np.ndarray | None = None,
     out_dtype=jnp.float32,
+    backend: str = "dense_scan",
+    a_sparse: BlockELL | None = None,
+    block_size: int = 8,
 ) -> jax.Array:
     """C = A^T B computed with the (P,S)-sparse code over a mesh axis.
 
     A: (s, r), B: (s, t), replicated over `axis_name` (the worker axis).
     Returns C (r, t) replicated.  r % m == 0, t % n == 0 required, and the
     mesh axis size must equal plan.num_workers.
+
+    backend selects the local-compute path (module docstring): "dense_scan"
+    or "block_sparse".  For "block_sparse", pass ``a_sparse`` (a host
+    ``BlockELL`` of A) or let A be packed automatically with ``block_size``;
+    additionally s and r/m must divide by the block size.
     """
+    if backend not in BACKENDS:
+        raise ValueError(f"backend {backend!r} not in {BACKENDS}")
     N = mesh.shape[axis_name]
     if N != plan.num_workers:
         raise ValueError(f"mesh axis {axis_name}={N} != plan workers {plan.num_workers}")
+    m, n = plan.m, plan.n
+    s, r = A.shape
+    _, t = B.shape
+    if r % m or t % n:
+        raise ValueError(f"A cols {r} % m={m} or B cols {t} % n={n} nonzero")
+    br, bt = r // m, t // n
+
     if survivors is not None:
         plan = plan.with_survivors(np.asarray(survivors, dtype=bool))
         alive = jnp.asarray(survivors, dtype=jnp.float32)
     else:
         alive = jnp.ones((N,), jnp.float32)
 
-    m, n = plan.m, plan.n
     cols_t = jnp.asarray(plan.cols)        # (N, L)
     w_t = jnp.asarray(plan.weights)        # (N, L)
     D_t = jnp.asarray(plan.decode)         # (mn, N)
 
+    if backend == "block_sparse":
+        if a_sparse is None and isinstance(A, jax.core.Tracer):
+            raise ValueError(
+                "backend='block_sparse' under jit needs a_sparse= (a host "
+                "BlockELL): the tile pack is static metadata and cannot be "
+                "derived from a traced operand")
+        ell = a_sparse if a_sparse is not None else dense_to_block_ell(
+            np.asarray(A, dtype=np.float32), block_size=block_size)
+        if ell.shape != (s, r):
+            raise ValueError(f"a_sparse shape {ell.shape} != A shape {(s, r)}")
+        pack = pack_worker_tiles(ell, plan)
+        vals_t = jnp.asarray(pack.vals)    # (N, CBl, Lw, bs, bs)
+        idx_t = jnp.asarray(pack.idx)      # (N, CBl, Lw)
+        t_tile = 128 if bt % 128 == 0 else bt
+        L = plan.cols.shape[1]
+
+        def local_product(k, A_, B_):
+            j = cols_t[k] % n                              # (L,) source col-block of B
+            Bsel = jnp.take(B_.reshape(s, n, bt), j, axis=1)   # (s, L, bt)
+            B_tall = (Bsel * w_t[k][None, :, None]).transpose(1, 0, 2)
+            B_tall = B_tall.reshape(L * s, bt)
+            return ops.spmm_block(vals_t[k], idx_t[k], B_tall, t_tile=t_tile)
+    else:
+
+        def local_product(k, A_, B_):
+            return _local_dense_scan(A_, B_, cols_t[k], w_t[k], m, n)
+
     def worker_fn(A_, B_):
         k = jax.lax.axis_index(axis_name)
-        Ct = _local_coded_product(A_, B_, cols_t[k], w_t[k], m, n)
+        Ct = local_product(k, A_, B_)
         # decode contribution: blocks_c += D[c, k] * C~_k  (zeroed if dead)
         contrib = (D_t[:, k] * alive[k])[:, None, None] * Ct[None]
         blocks = jax.lax.psum(contrib, axis_name)          # (mn, br, bt)
-        br, bt = Ct.shape
         C = blocks.reshape(m, n, br, bt).transpose(0, 2, 1, 3).reshape(m * br, n * bt)
         return C.astype(out_dtype)
 
-    other_axes = tuple(a for a in mesh.axis_names if a != axis_name)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         worker_fn, mesh=mesh,
         in_specs=(P(), P()),
         out_specs=P(),

@@ -30,8 +30,13 @@ import numpy as np
 import scipy.sparse as sp
 
 
-class DecodingError(RuntimeError):
-    pass
+class DecodingError(RuntimeError, ValueError):
+    """Collected results cannot be decoded (rank-deficient coefficient rows).
+
+    Subclasses both RuntimeError (historical) and ValueError so callers that
+    treat rank loss as bad input -- e.g. ``CodedMatmulPlan.with_survivors``
+    validation -- catch it either way.
+    """
 
 
 @dataclasses.dataclass

@@ -1,32 +1,25 @@
 """Public jit'd entry points for the Pallas kernels.
 
-On this CPU container the kernels execute via interpret=True (the Pallas
-interpreter runs the kernel body faithfully, including BlockSpec tiling);
-on a real TPU set REPRO_PALLAS_INTERPRET=0 (or pass interpret=False).
+Interpret mode is auto-selected from the backend: compiled kernels on TPU,
+the Pallas interpreter everywhere else (it runs the kernel body faithfully,
+including BlockSpec tiling).  Override per-call with ``interpret=`` or
+globally with REPRO_PALLAS_INTERPRET=0/1 (one shared policy:
+``repro.kernels.spmm_block.resolve_interpret``).
 """
 
 from __future__ import annotations
 
-import os
-
-import jax.numpy as jnp
-
 from repro.kernels.coded_accum import coded_accum as _coded_accum
-from repro.kernels.spmm_block import spmm_block as _spmm_block
+from repro.kernels.spmm_block import resolve_interpret, spmm_block as _spmm_block
 from repro.kernels import ref as ref  # re-export oracle for callers/tests
-
-
-def _default_interpret() -> bool:
-    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
 
 def coded_accum(A, B, cols, weights, *, m: int, n: int, s_chunk: int = 128,
                 interpret: bool | None = None):
-    interp = _default_interpret() if interpret is None else interpret
     return _coded_accum(A, B, cols, weights, m=m, n=n, s_chunk=s_chunk,
-                        interpret=interp)
+                        interpret=resolve_interpret(interpret))
 
 
 def spmm_block(vals, idx, B, *, t_tile: int = 128, interpret: bool | None = None):
-    interp = _default_interpret() if interpret is None else interpret
-    return _spmm_block(vals, idx, B, t_tile=t_tile, interpret=interp)
+    return _spmm_block(vals, idx, B, t_tile=t_tile,
+                       interpret=resolve_interpret(interpret))

@@ -1,6 +1,8 @@
 """Block-sparse SpMM Pallas kernel: C = A^T B with A in block-ELL (TPU target).
 
-TPU adaptation of the paper's sparse local products (DESIGN.md section 3):
+TPU adaptation of the paper's sparse local products (DESIGN.md section 3;
+the coded-matmul "block_sparse" backend in repro.core.coded_matmul is the
+SPMD consumer of this kernel):
 unstructured CSR gathers do not map to the MXU, so A is stored as packed
 bs x bs tiles (repro.sparse.BlockELL).  Each output row-block rb consumes its
 stripe vals[rb, :] of packed tiles; the tile's *source row-block in B* is
@@ -16,6 +18,7 @@ and add nothing.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -38,13 +41,34 @@ def _kernel(idx_ref, vals_ref, b_ref, o_ref):
     )
 
 
+def resolve_interpret(interpret: bool | None = None) -> bool:
+    """The single interpret-mode policy for every Pallas kernel here.
+
+    Explicit argument wins, then the REPRO_PALLAS_INTERPRET env override,
+    then backend auto-selection: compiled only on TPU.  The kernels target
+    the TPU MXU; everywhere else (CPU containers, tests) the Pallas
+    interpreter executes the same body faithfully, BlockSpec tiling
+    included.
+    """
+    if interpret is not None:
+        return interpret
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env != "0"
+    return jax.default_backend() != "tpu"
+
+
 @functools.partial(jax.jit, static_argnames=("t_tile", "interpret"))
-def spmm_block(vals, idx, B, *, t_tile: int = 128, interpret: bool = True):
+def spmm_block(vals, idx, B, *, t_tile: int = 128,
+               interpret: bool | None = None):
     """C = A^T B, A in block-ELL.
 
     vals: (CB, L, bs, bs), idx: (CB, L) int32, B: (s, t).
     Returns (CB * bs, t) f32.  t must divide by t_tile, s by bs.
+    interpret=None defers to ``resolve_interpret`` (env, then backend).
     """
+    if interpret is None:
+        interpret = resolve_interpret()
     CB, L, bs, _ = vals.shape
     s, t = B.shape
     if t % t_tile:

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs import ARCHS, get
 from repro.launch import meshctx
 from repro.launch.mesh import make_production_mesh
@@ -256,14 +257,16 @@ def build_cell(cfg, shape_name: str, mesh, scan_unroll=False, ce_chunk=None):
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
-             scan_unroll=False, cfg_override=None, ce_chunk=None) -> dict:
+             scan_unroll=False, cfg_override=None, ce_chunk=None,
+             mesh=None) -> dict:
     cfg = cfg_override or get(arch)
     ok, why = cell_supported(cfg, shape_name)
     if not ok:
         return {"arch": arch, "shape": shape_name,
                 "mesh": "multi" if multi_pod else "single",
                 "status": "skipped", "reason": why}
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
     record = {"arch": arch, "shape": shape_name,
               "mesh": "multi" if multi_pod else "single",
               "mesh_shape": dict(mesh.shape), "status": "ok"}
@@ -279,7 +282,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         compiled = lowered.compile()
         record["compile_s"] = round(time.time() - t0, 2)
 
-        ca = compiled.cost_analysis()
+        ca = compat.cost_analysis(compiled)
         record["cost_analysis"] = {
             "flops_per_device": float(ca.get("flops", -1)),
             "bytes_per_device": float(ca.get("bytes accessed", -1)),
@@ -303,6 +306,38 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     return record
 
 
+def sweep_cell(arch: str, shape: str, multi_pod: bool, outdir: pathlib.Path,
+               force: bool = False, mesh=None, cfg_override=None,
+               verbose: bool = False) -> dict:
+    """Run one cell and persist its record (ok, skipped, or error).
+
+    A family that fails to lower/compile is surfaced as an ``error`` record
+    carrying the exception string -- the report renders it as a table row
+    instead of the family silently vanishing from the sweep.
+
+    The on-disk cache is keyed by (arch, shape, mesh kind) only, so a
+    ``mesh``/``cfg_override`` call is never served from (or mixed into a
+    later read of) the cache under a key describing a different config: it
+    always recomputes and overwrites.  Cache hits are marked ``cached``.
+    """
+    tag = f"{arch}__{shape}__{'multi' if multi_pod else 'single'}"
+    path = pathlib.Path(outdir) / f"{tag}.json"
+    ad_hoc = mesh is not None or cfg_override is not None
+    if path.exists() and not force and not ad_hoc:
+        return dict(json.loads(path.read_text()), cached=True)
+    if verbose:
+        print(f"[dryrun] {tag}: lowering...", flush=True)
+    try:
+        rec = run_cell(arch, shape, multi_pod, mesh=mesh,
+                       cfg_override=cfg_override)
+    except Exception as e:  # noqa: BLE001 -- report and continue sweep
+        rec = {"arch": arch, "shape": shape,
+               "mesh": "multi" if multi_pod else "single",
+               "status": "error", "error": f"{type(e).__name__}: {e}"}
+    path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="all", help="arch id or 'all'")
@@ -324,25 +359,19 @@ def main():
         for shape in shapes:
             for multi in meshes:
                 tag = f"{arch}__{shape}__{'multi' if multi else 'single'}"
-                path = outdir / f"{tag}.json"
-                if path.exists() and not args.force:
+                rec = sweep_cell(arch, shape, multi, outdir, force=args.force,
+                                 verbose=True)
+                if rec.get("cached"):
                     print(f"[dryrun] {tag}: cached")
                     continue
-                print(f"[dryrun] {tag}: lowering...", flush=True)
-                try:
-                    rec = run_cell(arch, shape, multi)
-                except Exception as e:  # noqa: BLE001 -- report and continue sweep
-                    rec = {"arch": arch, "shape": shape,
-                           "mesh": "multi" if multi else "single",
-                           "status": "error", "error": f"{type(e).__name__}: {e}"}
-                    failures += 1
-                path.write_text(json.dumps(rec, indent=1))
                 status = rec["status"]
                 extra = ""
                 if status == "ok":
                     extra = (f" compile={rec['compile_s']}s "
                              f"flops/dev={rec['cost_analysis']['flops_per_device']:.3g} "
                              f"coll={rec['collectives']['total_bytes']:.3g}B")
+                elif status == "error":
+                    failures += 1
                 print(f"[dryrun] {tag}: {status}{extra}", flush=True)
     print(f"[dryrun] done, {failures} failures")
     return 0 if failures == 0 else 1

@@ -7,7 +7,7 @@ before any jax import; tests and benches keep the default single device).
 
 from __future__ import annotations
 
-import jax
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -21,8 +21,8 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes,
+                            axis_types=compat.auto_axis_types(len(axes)))
 
 
 def make_mesh_for_devices(n: int, model_parallel: int = None):
@@ -31,8 +31,8 @@ def make_mesh_for_devices(n: int, model_parallel: int = None):
     tp = model_parallel or min(16, n)
     if n % tp:
         raise ValueError(f"{n} devices not divisible by model_parallel={tp}")
-    return jax.make_mesh((n // tp, tp), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((n // tp, tp), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2))
 
 
 # Hardware constants for the roofline (TPU v5e).

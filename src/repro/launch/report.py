@@ -14,6 +14,8 @@ ROOT = pathlib.Path(__file__).resolve().parents[3] / "experiments"
 
 def _load(d: pathlib.Path):
     recs = []
+    if not d.is_dir():
+        return recs
     for p in sorted(d.glob("*.json")):
         recs.append(json.loads(p.read_text()))
     return recs
@@ -23,12 +25,20 @@ def _gb(x: float) -> str:
     return f"{x/2**30:.2f}"
 
 
-def dryrun_table() -> str:
-    recs = _load(ROOT / "dryrun")
+def dryrun_table(root: pathlib.Path | str | None = None) -> str:
+    """Markdown table of dryrun records under ``root`` (default: the
+    checked-in experiments dir).  Families that errored render as rows
+    carrying their error string; an empty/missing record dir renders an
+    explicit placeholder row rather than a silently bare header."""
+    recs = _load(pathlib.Path(root) if root is not None else ROOT / "dryrun")
     lines = [
         "| arch | shape | mesh | status | compile_s | flops/dev | HLO bytes/dev | coll bytes/dev | arg GiB/dev | temp GiB/dev |",
         "|---|---|---|---|---|---|---|---|---|---|",
     ]
+    if not recs:
+        lines.append("| (no dryrun records -- run "
+                     "`PYTHONPATH=src python -m repro.launch.dryrun`) "
+                     "| | | | | | | | | |")
     for r in recs:
         if r["status"] != "ok":
             lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
@@ -45,8 +55,9 @@ def dryrun_table() -> str:
     return "\n".join(lines)
 
 
-def roofline_table(include_variants: bool = False) -> str:
-    recs = _load(ROOT / "roofline")
+def roofline_table(include_variants: bool = False,
+                   root: pathlib.Path | str | None = None) -> str:
+    recs = _load(pathlib.Path(root) if root is not None else ROOT / "roofline")
     lines = [
         "| arch | shape | opts | compute_s | memory_s | collective_s | dominant "
         "| MODEL_FLOPS | HLO_FLOPS | useful | roofline<= |",
@@ -71,9 +82,9 @@ def roofline_table(include_variants: bool = False) -> str:
     return "\n".join(lines)
 
 
-def perf_table() -> str:
+def perf_table(root: pathlib.Path | str | None = None) -> str:
     """Baseline vs optimized, per cell that has variants."""
-    recs = _load(ROOT / "roofline")
+    recs = _load(pathlib.Path(root) if root is not None else ROOT / "roofline")
     by_cell: dict = {}
     for r in recs:
         if r["status"] != "ok":

@@ -203,6 +203,8 @@ def _combine(out_buf, se, st, pos, sg, Tl, d, E, dtype, cfg):
 
     from jax.sharding import PartitionSpec as P
 
+    from repro import compat
+
     tp = mesh.shape["model"]
     E_loc = E // tp
     dp_spec = dp_axes if len(dp_axes) > 1 else dp_axes[0]
@@ -220,7 +222,7 @@ def _combine(out_buf, se, st, pos, sg, Tl, d, E, dtype, cfg):
         summed = jax.lax.psum(partial.astype(jnp.bfloat16), "model")
         return summed.astype(dtype)[None]
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(dp_spec, "model", None, None), P(dp_spec, None),
                   P(dp_spec, None), P(dp_spec, None), P(dp_spec, None)),

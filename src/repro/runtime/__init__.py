@@ -8,5 +8,6 @@ from repro.runtime.straggler import (
 from repro.runtime.executor import (
     ExecutionReport,
     run_coded_job,
+    run_device_job,
     run_live_job,
 )

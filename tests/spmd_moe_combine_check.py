@@ -14,13 +14,14 @@ import jax
 import jax.numpy as jnp
 
 import repro.configs as configs
+from repro import compat
 from repro.launch import meshctx
 from repro.models import build
 
 
 def main():
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 4), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2))
     base = configs.get("qwen3-moe-30b-a3b").reduced()
     # E=4 divisible by tp=4; batch*seq divisible by dp=2
     cfgs = {

@@ -7,11 +7,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.coded_matmul import (
+    BACKENDS,
     CodedMatmulPlan,
     coded_matmul,
     make_plan,
+    pack_worker_tiles,
     uncoded_matmul_reference,
 )
+from repro.core.decoder import DecodingError
+from repro.sparse import dense_to_block_ell
 
 
 def _mesh_1d(name="model"):
@@ -60,11 +64,97 @@ def test_coded_matmul_spmd_8dev_subprocess():
     assert "ALL-OK" in out.stdout
 
 
+def test_coded_matmul_single_device_block_sparse():
+    # the block_sparse backend must agree with dense_scan on the trivial
+    # single-device code too (mn=1, one worker, bs=8 tiles)
+    mesh = _mesh_1d()
+    plan = make_plan(1, 1, num_workers=mesh.shape["model"], max_degree=1, seed=3)
+    rng = np.random.default_rng(1)
+    s, r, t = 24, 16, 12
+    A_np = rng.standard_normal((s, r))
+    A_np[:, 8:] = 0.0  # one dead column tile column: block sparsity is real
+    A = jnp.asarray(A_np, jnp.float32)
+    B = jnp.asarray(rng.standard_normal((s, t)), jnp.float32)
+    C = coded_matmul(A, B, plan, mesh, backend="block_sparse")
+    C_ref = uncoded_matmul_reference(A, B)
+    np.testing.assert_allclose(np.asarray(C), np.asarray(C_ref), atol=1e-2, rtol=1e-3)
+
+
+def test_coded_matmul_rejects_unknown_backend():
+    mesh = _mesh_1d()
+    plan = make_plan(1, 1, num_workers=mesh.shape["model"], max_degree=1, seed=3)
+    A = jnp.zeros((8, 8), jnp.float32)
+    B = jnp.zeros((8, 8), jnp.float32)
+    with pytest.raises(ValueError, match="backend"):
+        coded_matmul(A, B, plan, mesh, backend="nope")
+    assert set(BACKENDS) == {"dense_scan", "block_sparse"}
+
+
+def test_pack_worker_tiles_counts_live_tiles():
+    # packing is nnz-proportional: an all-zero A packs zero live tiles, a
+    # dense A packs (live blocks of A) x (slots with nonzero weight)
+    plan = make_plan(2, 2, num_workers=8, seed=0)
+    s, r = 16, 16
+    ell0 = dense_to_block_ell(np.zeros((s, r)), block_size=8)
+    p0 = pack_worker_tiles(ell0, plan)
+    assert p0.live_tiles.sum() == 0
+    ell1 = dense_to_block_ell(np.ones((s, r)), block_size=8)
+    p1 = pack_worker_tiles(ell1, plan)
+    live_slots = (plan.weights != 0).sum()
+    # per live slot: one column group of A = (s/8) x (br/8) = 2 x 1 tiles
+    assert p1.live_tiles.sum() == live_slots * 2
+    assert p1.vals.shape[0] == plan.num_workers
+
+
 def test_coded_matmul_survivor_refusal():
     plan = make_plan(2, 2, num_workers=6, seed=1)
     dead = np.zeros(6, dtype=bool)  # everyone dead
     with pytest.raises(ValueError):
         plan.with_survivors(dead)
+    # the specific failure is a DecodingError (which IS a ValueError), with
+    # the rank deficit spelled out
+    with pytest.raises(DecodingError, match="rank"):
+        plan.with_survivors(dead)
+    # a wrong-length mask is a plain usage error
+    with pytest.raises(ValueError, match="entries"):
+        plan.with_survivors(np.ones(4, dtype=bool))
+
+
+def _kill_k_keeping_rank(plan, k_dead, seed=0):
+    """A survivor mask with k_dead dead workers that keeps M full rank."""
+    M = plan.coefficient_matrix()
+    d = plan.m * plan.n
+    rng = np.random.default_rng(seed)
+    for _ in range(200):
+        surv = np.ones(plan.num_workers, dtype=bool)
+        surv[rng.choice(plan.num_workers, size=k_dead, replace=False)] = False
+        if np.linalg.matrix_rank(M * surv[:, None]) >= d:
+            return surv
+    pytest.skip(f"no full-rank mask with {k_dead} dead workers for this plan")
+
+
+@pytest.mark.parametrize("k_dead", [1, 2])
+def test_with_survivors_decodes_with_dead_workers(k_dead):
+    # decode correctness with 1 and 2 dead workers: the re-derived decode
+    # matrix must stay an exact left inverse of the masked coefficient rows
+    plan = make_plan(2, 2, num_workers=12, seed=4)
+    surv = _kill_k_keeping_rank(plan, k_dead)
+    p2 = plan.with_survivors(surv)
+    M_surv = plan.coefficient_matrix() * surv[:, None]
+    np.testing.assert_allclose(p2.decode @ M_surv, np.eye(4), atol=1e-4)
+    # dead workers' columns of the decode matrix are irrelevant: their
+    # contributions are zeroed on device, so D[:, dead] @ anything must not
+    # be needed -- verify decode applied to masked synthetic results is exact
+    rng = np.random.default_rng(1)
+    blocks = rng.standard_normal((4, 3, 5))
+    results = np.einsum("kc,cij->kij", M_surv, blocks)
+    np.testing.assert_allclose(
+        np.einsum("ck,kij->cij", p2.decode, results), blocks, atol=1e-6)
+
+
+def test_with_survivors_all_alive_is_identity_plan():
+    plan = make_plan(2, 2, num_workers=8, seed=2)
+    assert plan.with_survivors(np.ones(8, dtype=bool)) is plan
 
 
 def test_with_survivors_still_decodes():

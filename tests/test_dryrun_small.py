@@ -21,6 +21,7 @@ import json
 import dataclasses
 import jax
 import repro.configs as configs
+from repro import compat
 from repro.launch import meshctx
 from repro.launch.dryrun import build_cell, collective_bytes, SHAPES
 
@@ -51,8 +52,8 @@ for multi in (False, True):
     # re-labels half the data parallelism as the 'pod' axis
     shape = (2, 2, 2) if multi else (4, 2)
     axes = ("pod", "data", "model") if multi else ("data", "model")
-    mesh = jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    mesh = compat.make_mesh(shape, axes,
+                            axis_types=compat.auto_axis_types(len(axes)))
     for arch in ARCHS:
         cfg = tiny(configs.get(arch))
         for shp in ("tiny_train", "tiny_decode"):
@@ -60,7 +61,7 @@ for multi in (False, True):
                 fn, args, in_sh, out_sh = build_cell(cfg, shp, mesh)
                 compiled = jax.jit(fn, in_shardings=in_sh,
                                    out_shardings=out_sh).lower(*args).compile()
-            ca = compiled.cost_analysis()
+            ca = compat.cost_analysis(compiled)
             coll = collective_bytes(compiled.as_text())
             key = f"{arch}/{shp}/{'multi' if multi else 'single'}"
             out[key] = {"flops": float(ca.get("flops", -1)),

@@ -15,6 +15,10 @@ Invariants:
 import numpy as np
 import pytest
 import scipy.sparse as sp
+
+# optional test dependency (requirements-test.txt): every test here is a
+# hypothesis property, so skip the whole module -- never fail collection
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.core import (

@@ -1,4 +1,8 @@
 import dataclasses
+import os
+import pathlib
+import subprocess
+import sys
 
 import numpy as np
 import pytest
@@ -73,10 +77,65 @@ def test_reduced_configs_are_small():
         assert r.num_layers <= 16
 
 
-def test_report_tables_render():
+def test_with_opts_rejects_bad_coded_backend():
+    cfg = configs.get("internlm2-1.8b")
+    assert cfg.coded_backend == "dense_scan"
+    c2 = dataclasses.replace(cfg, coded_backend="block_sparse")
+    assert c2.coded_backend == "block_sparse"
+    with pytest.raises(ValueError, match="coded_backend"):
+        dataclasses.replace(cfg, coded_backend="csr")
+
+
+_DRYRUN_RECORDS_SCRIPT = r"""
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")
+import dataclasses, pathlib
+import repro.configs as configs
+from repro import compat
+from repro.launch import dryrun, meshctx
+
+outdir = pathlib.Path(sys.argv[1])
+mesh = compat.make_mesh((4, 2), ("data", "model"),
+                        axis_types=compat.auto_axis_types(2))
+cfg = dataclasses.replace(
+    configs.get("internlm2-1.8b"), num_layers=1, d_model=64, num_heads=4,
+    num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=512, max_seq=64)
+dryrun.SHAPES["tiny_train"] = dict(seq=32, batch=8, kind="train")
+dryrun.SHAPES["tiny_decode"] = dict(seq=32, batch=8, kind="decode")
+for shp in ("tiny_train", "tiny_decode"):
+    rec = dryrun.sweep_cell("internlm2-1.8b", shp, False, outdir,
+                            mesh=mesh, cfg_override=cfg)
+    assert rec["status"] == "ok", rec
+# a family that fails must surface its error string as a record, not vanish
+rec2 = dryrun.sweep_cell("no-such-arch", "tiny_train", False, outdir, mesh=mesh)
+assert rec2["status"] == "error" and "KeyError" in rec2["error"], rec2
+print("RECORDS-OK")
+"""
+
+
+def test_report_tables_render(tmp_path):
     from repro.launch.report import dryrun_table, perf_table, roofline_table
-    d = dryrun_table()
-    assert d.count("|") > 50
+
+    # an empty/missing records dir renders an explicit placeholder, never a
+    # silently bare header
+    empty = dryrun_table(root=tmp_path / "nothing-here")
+    assert "no dryrun records" in empty
+
+    # real records: one compiled tiny cell + one errored family, produced by
+    # the dryrun sweep machinery in a subprocess (8-device mesh isolation)
+    outdir = tmp_path / "dryrun"
+    outdir.mkdir()
+    env = dict(os.environ, PYTHONPATH=str(pathlib.Path(__file__).parents[1] / "src"))
+    proc = subprocess.run(
+        [sys.executable, "-c", _DRYRUN_RECORDS_SCRIPT, str(outdir)],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-4000:]
+
+    d = dryrun_table(root=outdir)
+    assert d.count("|") > 50          # header + data rows
+    assert "| ok |" in d              # the compiled family is a data row
+    assert "error: KeyError" in d     # the failed family surfaces its error
     r = roofline_table()
     assert "dominant" in r or "arch" in r
     perf_table()  # renders without error even if variants are sparse

@@ -85,3 +85,23 @@ def test_all_schemes_complete_under_stragglers():
             got = got.toarray() if sp.issparse(got) else np.asarray(got)
             np.testing.assert_allclose(got, want, atol=1e-5,
                                        err_msg=f"scheme {name}")
+
+
+def test_run_device_job_single_device_both_backends():
+    """The SPMD bridge: run_device_job stages coded_matmul on the default
+    (single-device) mesh and returns the decoded product for each backend."""
+    from repro.core.coded_matmul import make_plan
+    from repro.runtime import run_device_job
+
+    rng = np.random.default_rng(6)
+    s, r, t = 24, 16, 8
+    A = rng.standard_normal((s, r)).astype(np.float32)
+    B = rng.standard_normal((s, t)).astype(np.float32)
+    plan = make_plan(1, 1, num_workers=1, max_degree=1, seed=0)
+    for backend in ("dense_scan", "block_sparse"):
+        rep = run_device_job(A, B, plan, backend=backend, repeats=1)
+        assert rep.scheme == f"spmd_{backend}"
+        assert rep.decode_stats["on_device_decode"]
+        assert rep.workers_used == rep.num_workers == 1
+        np.testing.assert_allclose(rep.blocks[0], A.T @ B, atol=1e-3,
+                                   rtol=1e-3, err_msg=backend)
