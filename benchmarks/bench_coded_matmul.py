@@ -1,11 +1,14 @@
 """SPMD integration benchmark (no paper figure -- the framework's own table):
 coded vs uncoded distributed matmul on a JAX mesh, across both local-compute
-backends (dense_scan vs the block-sparse Pallas path).
+backends (dense_scan vs the fused-gather block-sparse path), swept over
+block densities {2%, 10%, 30%}.
 
 Runs in a subprocess with 8 host devices (this process keeps the default
-single device).  Reports wall time, the redundancy overhead of the coded
-path, the dense-vs-block-sparse backend ratio on a block-sparse operand,
-plus the fault-tolerance outcome (decode with a killed worker)."""
+single-device platform).  Reports wall time per (density, backend), the
+scatter-decode variant, the redundancy overhead of the coded path, and the
+fault-tolerance outcome (decode with a killed worker).  The full result
+dict is persisted to BENCH_coded_matmul.json at the repo root, seeding the
+perf trajectory the CI artifact tracks."""
 
 from __future__ import annotations
 
@@ -16,41 +19,30 @@ import sys
 
 from benchmarks.common import Row
 
+DENSITIES = (0.02, 0.10, 0.30)
+
 _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")
-import json, time
+import json, sys, time
 import numpy as np
 import jax, jax.numpy as jnp
 from repro import compat
 from repro.core.coded_matmul import coded_matmul, make_plan, uncoded_matmul_reference
 from repro.sparse import dense_to_block_ell
 
+FULL = bool(int(sys.argv[1])) if len(sys.argv) > 1 else False
+DENSITIES = json.loads(sys.argv[2]) if len(sys.argv) > 2 else [0.02, 0.10, 0.30]
+
 mesh = compat.make_mesh((8,), ("model",),
                         axis_types=compat.auto_axis_types(1))
 m = n = 2
 plan = make_plan(m, n, num_workers=8, seed=0)
-# sized for CPU-interpret Pallas (the block_sparse backend timing here is the
-# interpreter's, not the MXU's -- the comparison is structural, not absolute)
-s, r, t = 512, 256, 256
+s, r, t = (1024, 512, 512) if FULL else (512, 256, 256)
 bs = 8
 rng = np.random.default_rng(0)
-# block-sparse A (~10% of 8x8 tiles live): the regime where the block_sparse
-# backend's nnz-proportional local compute should pay off
-mask = rng.random((s // bs, r // bs)) < 0.10
-A_np = rng.standard_normal((s, r)) * np.kron(mask, np.ones((bs, bs)))
-A = jnp.asarray(A_np, jnp.float32)
 B = jnp.asarray(rng.standard_normal((s, t)), jnp.float32)
-
-# the tile pack is static metadata: build it on host, outside jit
-ell = dense_to_block_ell(np.asarray(A_np, np.float32), block_size=bs)
-coded = {
-    "dense_scan": jax.jit(lambda a, b: coded_matmul(
-        a, b, plan, mesh, backend="dense_scan")),
-    "block_sparse": jax.jit(lambda a, b: coded_matmul(
-        a, b, plan, mesh, backend="block_sparse", a_sparse=ell)),
-}
 unc = jax.jit(uncoded_matmul_reference)
 
 def bench(fn, *args):
@@ -62,17 +54,43 @@ def bench(fn, *args):
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts))
 
-out = {"max_degree": plan.max_degree,
-       "block_density": float(mask.mean())}
-ref = unc(A, B)
-for backend, fn in coded.items():
-    out[f"t_{backend}"] = bench(fn, A, B)
-    out[f"err_{backend}"] = float(jnp.max(jnp.abs(fn(A, B) - ref)))
-out["t_uncoded"] = bench(unc, A, B)
+out = {"max_degree": plan.max_degree, "shape": {"s": s, "r": r, "t": t},
+       "block_size": bs, "num_workers": 8, "densities": {}}
 
-# fault tolerance: kill worker 3, decode from survivors on both backends
+for density in DENSITIES:
+    mask = rng.random((s // bs, r // bs)) < density
+    A_np = rng.standard_normal((s, r)) * np.kron(mask, np.ones((bs, bs)))
+    A = jnp.asarray(A_np, jnp.float32)
+    # the tile pack is static metadata: build it on host, outside jit
+    ell = dense_to_block_ell(np.asarray(A_np, np.float32), block_size=bs)
+    fns = {
+        "dense_scan": jax.jit(lambda a, b: coded_matmul(
+            a, b, plan, mesh, backend="dense_scan")),
+        "block_sparse": jax.jit(lambda a, b: coded_matmul(
+            a, b, plan, mesh, backend="block_sparse", a_sparse=ell)),
+        "block_sparse_scatter": jax.jit(lambda a, b: coded_matmul(
+            a, b, plan, mesh, backend="block_sparse", a_sparse=ell,
+            out_sharded=True)),
+    }
+    ref = unc(A, B)
+    d = {"block_density": float(mask.mean()),
+         "live_tile_fraction": float(ell.nnzb.sum()) / ((s // bs) * (r // bs))}
+    for name, fn in fns.items():
+        d[f"t_{name}"] = bench(fn, A, B)
+        d[f"err_{name}"] = float(jnp.max(jnp.abs(fn(A, B) - ref)))
+    d["t_uncoded"] = bench(unc, A, B)
+    d["speedup_block_vs_dense"] = d["t_dense_scan"] / max(d["t_block_sparse"], 1e-12)
+    out["densities"][f"{density:.2f}"] = d
+
+# fault tolerance at the middle density: kill worker 3, decode from survivors
+density = DENSITIES[len(DENSITIES) // 2]
+mask = rng.random((s // bs, r // bs)) < density
+A_np = rng.standard_normal((s, r)) * np.kron(mask, np.ones((bs, bs)))
+A = jnp.asarray(A_np, jnp.float32)
+ell = dense_to_block_ell(np.asarray(A_np, np.float32), block_size=bs)
+ref = unc(A, B)
 surv = np.ones(8, dtype=bool); surv[3] = False
-for backend in coded:
+for backend in ("dense_scan", "block_sparse"):
     kw = {"a_sparse": ell} if backend == "block_sparse" else {}
     try:
         C2 = coded_matmul(A, B, plan, mesh, survivors=surv, backend=backend, **kw)
@@ -85,27 +103,34 @@ print(json.dumps(out))
 
 
 def run(quick: bool = True):
-    src = pathlib.Path(__file__).parents[1] / "src"
-    proc = subprocess.run([sys.executable, "-c", _SCRIPT],
-                          env={"PYTHONPATH": str(src), "PATH": "/usr/bin:/bin",
-                               "HOME": "/root"},
-                          capture_output=True, text=True, timeout=900)
+    root = pathlib.Path(__file__).parents[1]
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT, "0" if quick else "1",
+         json.dumps(list(DENSITIES))],
+        env={"PYTHONPATH": str(root / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/root"},
+        capture_output=True, text=True, timeout=900)
     rows = []
     if proc.returncode != 0:
         rows.append(Row("coded_matmul/ERROR", 0.0, proc.stderr[-200:]))
         return rows
     d = json.loads(proc.stdout.strip().splitlines()[-1])
-    t_dense = d["t_dense_scan"]
-    t_block = d["t_block_sparse"]
-    rows.append(Row("coded_matmul/coded_dense_scan_8dev", t_dense * 1e6,
-                    f"max_err={d['err_dense_scan']:.2e} max_degree={d['max_degree']}"))
-    rows.append(Row(
-        "coded_matmul/coded_block_sparse_8dev", t_block * 1e6,
-        f"max_err={d['err_block_sparse']:.2e} "
-        f"block_density={d['block_density']:.2f} "
-        f"vs_dense={t_dense / max(t_block, 1e-12):.2f}x"))
-    rows.append(Row("coded_matmul/uncoded_8dev", d["t_uncoded"] * 1e6,
-                    f"overhead={t_dense / max(d['t_uncoded'], 1e-12):.2f}x"))
+    (root / "BENCH_coded_matmul.json").write_text(json.dumps(d, indent=2) + "\n")
+    for key, dd in d["densities"].items():
+        rows.append(Row(
+            f"coded_matmul/dense_scan_8dev_d{key}", dd["t_dense_scan"] * 1e6,
+            f"max_err={dd['err_dense_scan']:.2e} max_degree={d['max_degree']}"))
+        rows.append(Row(
+            f"coded_matmul/block_sparse_8dev_d{key}", dd["t_block_sparse"] * 1e6,
+            f"max_err={dd['err_block_sparse']:.2e} "
+            f"vs_dense={dd['speedup_block_vs_dense']:.2f}x"))
+        rows.append(Row(
+            f"coded_matmul/block_sparse_scatter_8dev_d{key}",
+            dd["t_block_sparse_scatter"] * 1e6,
+            f"max_err={dd['err_block_sparse_scatter']:.2e}"))
+        rows.append(Row(
+            f"coded_matmul/uncoded_8dev_d{key}", dd["t_uncoded"] * 1e6,
+            f"overhead={dd['t_dense_scan'] / max(dd['t_uncoded'], 1e-12):.2f}x"))
     rows.append(Row(
         "coded_matmul/fault_tolerant_decode", 0.0,
         f"killed_worker_3_err dense={d['ft_err_dense_scan']:.2e} "

@@ -1,9 +1,10 @@
 """Benchmark harness: one module per paper table/figure.
 
-  python -m benchmarks.run [--full] [--only NAME]
+  python -m benchmarks.run [--quick | --full] [--only NAME]
 
 Prints ``name,us_per_call,derived`` CSV rows.  --full uses the larger
-configurations (slower, closer to the paper's dimensions).
+configurations (slower, closer to the paper's dimensions); --quick is the
+default small configuration, spelled out for CI invocations.
 """
 
 from __future__ import annotations
@@ -33,11 +34,15 @@ SUITES = {
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true")
+    size = ap.add_mutually_exclusive_group()
+    size.add_argument("--full", action="store_true")
+    size.add_argument("--quick", action="store_true",
+                      help="small configurations (the default, made explicit)")
     ap.add_argument("--only", default=None, choices=list(SUITES))
     args = ap.parse_args(argv)
 
     names = [args.only] if args.only else list(SUITES)
+    failed = []
     print("name,us_per_call,derived")
     for name in names:
         t0 = time.time()
@@ -45,10 +50,18 @@ def main(argv=None) -> None:
             rows = SUITES[name].run(quick=not args.full)
         except Exception as e:  # noqa: BLE001 -- keep the suite going
             print(f"{name}/SUITE_ERROR,0.0,{type(e).__name__}: {e}")
+            failed.append(name)
             continue
         for row in rows:
             print(row)
+            if "/ERROR" in str(row).split(",", 1)[0]:
+                failed.append(name)
         print(f"# {name} finished in {time.time() - t0:.1f}s", file=sys.stderr)
+    if failed:
+        # exit nonzero so CI goes red on the bench step itself, not on a
+        # downstream missing-artifact message
+        print(f"# FAILED suites: {sorted(set(failed))}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -68,6 +68,19 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, check_rep=None,
                       **kwargs)
 
 
+def psum_scatter(x, axis_name, *, scatter_dimension: int = 0, tiled: bool = True):
+    """Version-portable ``lax.psum_scatter`` (reduce-scatter over a mesh axis).
+
+    The decode-sharding path goes through here per the module policy: the
+    collective has lived at ``jax.lax.psum_scatter`` since 0.2.x, but routing
+    it through compat keeps call sites insulated if the signature moves the
+    way shard_map's did.  ``tiled=True`` splits ``scatter_dimension`` (which
+    must divide by the axis size) instead of adding a leading axis.
+    """
+    return jax.lax.psum_scatter(
+        x, axis_name, scatter_dimension=scatter_dimension, tiled=tiled)
+
+
 def cost_analysis(compiled) -> dict:
     """``Compiled.cost_analysis()`` normalized across JAX versions.
 

@@ -78,8 +78,9 @@ class ArchConfig:
     coded_backend: str = "dense_scan"  # local-compute backend for the coded
     #   matmul device path (repro.core.coded_matmul.BACKENDS):
     #   "dense_scan" = einsum over padded task slots; "block_sparse" =
-    #   per-worker packed tiles through the kernels.spmm_block Pallas kernel
-    #   (compute scales with live tiles, not dense dims)
+    #   per-worker fused-gather tiles through the kernels.spmm_block_fused
+    #   Pallas kernel (tiles DMA'd straight out of B; compute AND traffic
+    #   scale with live tiles, not dense dims)
 
     def __post_init__(self):
         if self.coded_backend not in ("dense_scan", "block_sparse"):

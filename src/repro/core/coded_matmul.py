@@ -16,11 +16,22 @@ Local-compute backends:
 * ``"dense_scan"``   -- einsum over the (padded) task slots as a lax.scan:
   exactly ``max_degree`` dense block products per worker.  Cost scales with
   the dense block dims regardless of sparsity.
-* ``"block_sparse"`` -- A is packed host-side into per-worker block-ELL
-  stripes (``pack_worker_tiles``) and the local product dispatches the
-  ``repro.kernels.spmm_block`` Pallas kernel, so local compute and HBM
-  traffic scale with the number of LIVE tiles -- the paper's
-  nnz-proportional claim (Theorem 1) on the device path.
+* ``"block_sparse"`` -- A is packed host-side into per-worker fused-gather
+  tiles (``pack_worker_tiles``: tile values + source row-block/column-group
+  addresses into the ORIGINAL B + per-slot weights) and the local product
+  dispatches ``repro.kernels.spmm_block_fused``, which DMAs tiles straight
+  out of the untouched (s, t) B.  No stacked ``B_tall`` copy is ever
+  materialized, so local compute AND HBM traffic scale with the number of
+  LIVE tiles -- the paper's nnz-proportional claim (Theorem 1) end-to-end
+  on the device path.
+
+Decode layout: by default the decode psum replicates the full
+``(mn, br, bt)`` block tensor to every device.  With ``out_sharded=True``
+the decode is a ``psum_scatter`` instead -- each device reduces only its
+1/N shard of the (zero-padded to a multiple of N) block dimension, so
+decode traffic is also nnz-proportional; the final block->C assembly is
+left to XLA outside the shard_map and only gathers if a consumer demands
+replication.
 
 TPU adaptation notes (DESIGN.md section 3):
   - SPMD lockstep means every device pays for the *maximum* degree in the
@@ -182,28 +193,38 @@ def _local_dense_scan(A, B, cols_k, w_k, m: int, n: int):
 
 @dataclasses.dataclass(frozen=True)
 class WorkerTilePack:
-    """Per-worker block-ELL stripes of the *stacked* sparse operand.
+    """Per-worker fused-gather tiles of the sparse operand.
 
-    Worker k's local product sum_l w_kl A_{i_l}^T B_{j_l} is one SpMM
-    A_k^T B_k with A_k = vstack_l(A_{i_l}) of shape (L*s, br) and
-    B_k = vstack_l(w_kl B_{j_l}) assembled on device.  ``vals``/``idx`` are
-    A_k's packed tiles for every worker (the spmm_block kernel layout):
+    Worker k's local product sum_l w_kl A_{i_l}^T B_{j_l} runs as ONE
+    fused-gather SpMM (``kernels.spmm_block_fused``): each packed tile of A
+    carries the address of the B tile it multiplies -- source row-block in
+    the original (s, t) B plus the source column group j_l -- and the slot's
+    code weight.  Nothing of B is ever stacked or copied:
 
-      vals : (N, br/bs, Lw, bs, bs)   live tiles, zero-padded to Lw slots
-      idx  : (N, br/bs, Lw)           source row-block index into (L*s)/bs
+      vals : (N, br/bs, Lw, bs, bs)  live tiles, zero-padded to Lw slots
+      src  : (N, br/bs, Lw, 2) int32 [row-block of B in s/bs, column group
+             j in n]
+      wslot: (N, br/bs, Lw) f32      the slot's code weight w_kl (0 on pads)
 
-    Weights are NOT folded into the tiles -- they scale the B stack instead,
-    so one pack serves any survivor mask.
+    Weights stay per-slot (not folded into the tile values), and the pack
+    depends only on ``plan.cols``/``plan.weights`` -- never on the decode
+    matrix -- so one pack serves any survivor mask.
     """
 
     vals: np.ndarray
-    idx: np.ndarray
+    src: np.ndarray
+    wslot: np.ndarray
     block_size: int
     live_tiles: np.ndarray  # (N,) total live tiles per worker (cost proxy)
 
 
 def pack_worker_tiles(a_sparse: BlockELL, plan: CodedMatmulPlan) -> WorkerTilePack:
-    """Re-stripe A's global block-ELL into per-worker stacked-operand tiles."""
+    """Re-stripe A's global block-ELL into per-worker fused-gather tiles.
+
+    Fully vectorized (bucketed NumPy, no Python loop over N x L x CB):
+    entries are laid out slot-major (l ascending, then the BlockELL tile
+    order within the slot), the same order the old nested loops produced.
+    """
     s, r = a_sparse.shape
     bs = a_sparse.block_size
     m, n = plan.m, plan.n
@@ -214,37 +235,51 @@ def pack_worker_tiles(a_sparse: BlockELL, plan: CodedMatmulPlan) -> WorkerTilePa
         raise ValueError(
             f"block partition ({br} x {s}) not divisible by block_size {bs}")
     CBl = br // bs            # column blocks per worker output row-block
-    RBs = s // bs             # row blocks per stacked segment
     N, L = plan.cols.shape
 
-    per: list[list[list[tuple[int, np.ndarray]]]] = [
-        [[] for _ in range(CBl)] for _ in range(N)]
-    for k in range(N):
-        for l in range(L):
-            if plan.weights[k, l] == 0.0:
-                continue      # padded slot: no tiles, B segment is zeroed
-            i = int(plan.cols[k, l]) // n
-            for cb in range(CBl):
-                g = i * CBl + cb
-                for e in range(int(a_sparse.nnzb[g])):
-                    per[k][cb].append(
-                        (l * RBs + int(a_sparse.idx[g, e]), a_sparse.vals[g, e]))
+    live_slot = plan.weights != 0.0                     # (N, L)
+    i_blk = (plan.cols // n).astype(np.int64)           # (N, L) source A column group
+    j_blk = (plan.cols % n).astype(np.int32)            # (N, L) source B column group
+    # global BlockELL stripe feeding (k, l, cb):  g = i * CBl + cb
+    g = i_blk[:, :, None] * CBl + np.arange(CBl)[None, None, :]   # (N, L, CBl)
+    cnt = np.where(live_slot[:, :, None], a_sparse.nnzb[g], 0)    # (N, L, CBl)
+    per_kcb = cnt.transpose(0, 2, 1)                    # (N, CBl, L)
+    Lw = max(1, int(per_kcb.sum(axis=-1).max(initial=0)))
+    # destination slot of each stripe's first tile: exclusive cumsum over l
+    off = np.cumsum(per_kcb, axis=-1) - per_kcb         # (N, CBl, L)
 
-    Lw = max(1, max((len(per[k][cb]) for k in range(N) for cb in range(CBl)),
-                    default=1))
+    E = a_sparse.slots
+    valid = np.arange(E)[None, None, None, :] < per_kcb[..., None]  # (N,CBl,L,E)
+    kk, cc, ll, ee = np.nonzero(valid)
+    gg = g[kk, ll, cc]
+    dst = off[kk, cc, ll] + ee
+
     vals = np.zeros((N, CBl, Lw, bs, bs), dtype=np.float32)
-    idx = np.zeros((N, CBl, Lw), dtype=np.int32)
-    live = np.zeros((N,), dtype=np.int64)
-    for k in range(N):
-        for cb in range(CBl):
-            for slot, (src, tile) in enumerate(per[k][cb]):
-                vals[k, cb, slot] = tile
-                idx[k, cb, slot] = src
-            live[k] += len(per[k][cb])
-    return WorkerTilePack(vals=vals, idx=idx, block_size=bs, live_tiles=live)
+    src = np.zeros((N, CBl, Lw, 2), dtype=np.int32)
+    wslot = np.zeros((N, CBl, Lw), dtype=np.float32)
+    vals[kk, cc, dst] = a_sparse.vals[gg, ee]
+    src[kk, cc, dst, 0] = a_sparse.idx[gg, ee]
+    src[kk, cc, dst, 1] = j_blk[kk, ll]
+    wslot[kk, cc, dst] = plan.weights[kk, ll]
+    live = per_kcb.sum(axis=(1, 2)).astype(np.int64)
+    return WorkerTilePack(vals=vals, src=src, wslot=wslot, block_size=bs,
+                          live_tiles=live)
 
 
 # ------------------------------- entry point --------------------------------
+
+def _largest_tile(bt: int, cap: int = 128) -> int:
+    """Largest divisor of bt that is <= cap (tile width for the kernel grid).
+
+    Falling back to the whole row (bt) only when bt itself is <= cap or
+    prime beyond it -- never a degenerate full-width tile when a proper
+    divisor exists.
+    """
+    for d in range(min(bt, cap), 0, -1):
+        if bt % d == 0:
+            return d
+    return 1
+
 
 def coded_matmul(
     A: jax.Array,
@@ -257,17 +292,25 @@ def coded_matmul(
     backend: str = "dense_scan",
     a_sparse: BlockELL | None = None,
     block_size: int = 8,
+    pack: WorkerTilePack | None = None,
+    out_sharded: bool = False,
 ) -> jax.Array:
     """C = A^T B computed with the (P,S)-sparse code over a mesh axis.
 
     A: (s, r), B: (s, t), replicated over `axis_name` (the worker axis).
-    Returns C (r, t) replicated.  r % m == 0, t % n == 0 required, and the
-    mesh axis size must equal plan.num_workers.
+    Returns C (r, t).  r % m == 0, t % n == 0 required, and the mesh axis
+    size must equal plan.num_workers.
 
     backend selects the local-compute path (module docstring): "dense_scan"
-    or "block_sparse".  For "block_sparse", pass ``a_sparse`` (a host
-    ``BlockELL`` of A) or let A be packed automatically with ``block_size``;
-    additionally s and r/m must divide by the block size.
+    or "block_sparse".  For "block_sparse", pass ``pack`` (a prebuilt
+    ``WorkerTilePack``, e.g. from the runtime pack cache) or ``a_sparse``
+    (a host ``BlockELL`` of A), or let A be packed automatically with
+    ``block_size``; additionally s and r/m must divide by the block size.
+
+    out_sharded selects the decode collective: False (default) psums the
+    full (mn, br, bt) block tensor to every device; True reduce-scatters it
+    (``compat.psum_scatter``) so each device reduces only its shard, and C
+    is assembled outside the shard_map.  Both produce the same C.
     """
     if backend not in BACKENDS:
         raise ValueError(f"backend {backend!r} not in {BACKENDS}")
@@ -292,37 +335,64 @@ def coded_matmul(
     D_t = jnp.asarray(plan.decode)         # (mn, N)
 
     if backend == "block_sparse":
-        if a_sparse is None and isinstance(A, jax.core.Tracer):
+        if pack is None:
+            if a_sparse is None and isinstance(A, jax.core.Tracer):
+                raise ValueError(
+                    "backend='block_sparse' under jit needs a_sparse= (a host "
+                    "BlockELL) or pack= (a WorkerTilePack): the tile pack is "
+                    "static metadata and cannot be derived from a traced "
+                    "operand")
+            ell = a_sparse if a_sparse is not None else dense_to_block_ell(
+                np.asarray(A, dtype=np.float32), block_size=block_size)
+            if ell.shape != (s, r):
+                raise ValueError(f"a_sparse shape {ell.shape} != A shape {(s, r)}")
+            pack = pack_worker_tiles(ell, plan)
+        if pack.vals.shape[0] != N:
             raise ValueError(
-                "backend='block_sparse' under jit needs a_sparse= (a host "
-                "BlockELL): the tile pack is static metadata and cannot be "
-                "derived from a traced operand")
-        ell = a_sparse if a_sparse is not None else dense_to_block_ell(
-            np.asarray(A, dtype=np.float32), block_size=block_size)
-        if ell.shape != (s, r):
-            raise ValueError(f"a_sparse shape {ell.shape} != A shape {(s, r)}")
-        pack = pack_worker_tiles(ell, plan)
+                f"pack built for {pack.vals.shape[0]} workers, mesh has {N}")
+        # a pack built against different operands silently gathers garbage
+        # (XLA clamps out-of-range indices), so validate it against (s, r)
+        bs_p = pack.block_size
+        if s % bs_p or pack.vals.shape[1] * bs_p != br:
+            raise ValueError(
+                f"pack (block_size={bs_p}, {pack.vals.shape[1]} column "
+                f"blocks) does not tile operands with s={s}, br={br}")
+        if int(pack.src[..., 0].max(initial=0)) >= s // bs_p:
+            raise ValueError(
+                f"pack row-block indices exceed s//bs={s // bs_p}: the pack "
+                "was built for a different A")
+        if int(pack.src[..., 1].max(initial=0)) >= n:
+            raise ValueError(
+                f"pack column-group indices exceed n={n}: the pack was "
+                "built for a different plan")
         vals_t = jnp.asarray(pack.vals)    # (N, CBl, Lw, bs, bs)
-        idx_t = jnp.asarray(pack.idx)      # (N, CBl, Lw)
-        t_tile = 128 if bt % 128 == 0 else bt
-        L = plan.cols.shape[1]
+        src_t = jnp.asarray(pack.src)      # (N, CBl, Lw, 2)
+        wsl_t = jnp.asarray(pack.wslot)    # (N, CBl, Lw)
+        t_tile = _largest_tile(bt)
 
         def local_product(k, A_, B_):
-            j = cols_t[k] % n                              # (L,) source col-block of B
-            Bsel = jnp.take(B_.reshape(s, n, bt), j, axis=1)   # (s, L, bt)
-            B_tall = (Bsel * w_t[k][None, :, None]).transpose(1, 0, 2)
-            B_tall = B_tall.reshape(L * s, bt)
-            return ops.spmm_block(vals_t[k], idx_t[k], B_tall, t_tile=t_tile)
+            # fused gather: tiles address the original B directly -- no
+            # stacked (max_degree * s, bt) copy is ever materialized
+            return ops.spmm_block_fused(vals_t[k], src_t[k], wsl_t[k], B_,
+                                        bt=bt, t_tile=t_tile)
     else:
 
         def local_product(k, A_, B_):
             return _local_dense_scan(A_, B_, cols_t[k], w_t[k], m, n)
+
+    mn = m * n
+    mn_pad = -(-mn // N) * N  # scatter splits the block dim N ways
 
     def worker_fn(A_, B_):
         k = jax.lax.axis_index(axis_name)
         Ct = local_product(k, A_, B_)
         # decode contribution: blocks_c += D[c, k] * C~_k  (zeroed if dead)
         contrib = (D_t[:, k] * alive[k])[:, None, None] * Ct[None]
+        if out_sharded:
+            contrib = jnp.pad(contrib, ((0, mn_pad - mn), (0, 0), (0, 0)))
+            # each device reduces only its 1/N shard of the block dim
+            return compat.psum_scatter(contrib, axis_name,
+                                       scatter_dimension=0, tiled=True)
         blocks = jax.lax.psum(contrib, axis_name)          # (mn, br, bt)
         C = blocks.reshape(m, n, br, bt).transpose(0, 2, 1, 3).reshape(m * br, n * bt)
         return C.astype(out_dtype)
@@ -330,10 +400,14 @@ def coded_matmul(
     fn = compat.shard_map(
         worker_fn, mesh=mesh,
         in_specs=(P(), P()),
-        out_specs=P(),
+        out_specs=P(axis_name) if out_sharded else P(),
         check_vma=False,
     )
-    return fn(A, B)
+    if not out_sharded:
+        return fn(A, B)
+    blocks = fn(A, B)                                      # (mn_pad, br, bt)
+    C = blocks[:mn].reshape(m, n, br, bt).transpose(0, 2, 1, 3)
+    return C.reshape(m * br, n * bt).astype(out_dtype)
 
 
 def uncoded_matmul_reference(A, B):

@@ -83,10 +83,10 @@ def peel_schedule(
     M = sp.csr_matrix(M)
     K, d = M.shape
     if check_rank:
-        dense = M.toarray()
-        if np.linalg.matrix_rank(dense) < d:
+        rank = int(np.linalg.matrix_rank(M.toarray()))
+        if rank < d:
             raise DecodingError(
-                f"coefficient matrix rank {np.linalg.matrix_rank(dense)} < {d}; "
+                f"coefficient matrix rank {rank} < {d}; "
                 "collect more results before decoding"
             )
     rng = rng or np.random.default_rng(0)

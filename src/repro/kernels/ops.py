@@ -10,7 +10,11 @@ globally with REPRO_PALLAS_INTERPRET=0/1 (one shared policy:
 from __future__ import annotations
 
 from repro.kernels.coded_accum import coded_accum as _coded_accum
-from repro.kernels.spmm_block import resolve_interpret, spmm_block as _spmm_block
+from repro.kernels.spmm_block import (
+    resolve_interpret,
+    spmm_block as _spmm_block,
+    spmm_block_fused as _spmm_block_fused,
+)
 from repro.kernels import ref as ref  # re-export oracle for callers/tests
 
 
@@ -23,3 +27,11 @@ def coded_accum(A, B, cols, weights, *, m: int, n: int, s_chunk: int = 128,
 def spmm_block(vals, idx, B, *, t_tile: int = 128, interpret: bool | None = None):
     return _spmm_block(vals, idx, B, t_tile=t_tile,
                        interpret=resolve_interpret(interpret))
+
+
+def spmm_block_fused(vals, src, wslot, B, *, bt: int, t_tile: int = 128,
+                     interpret: bool | None = None):
+    # dispatch (Pallas vs XLA gather path) lives in spmm_block_fused itself:
+    # interpret=None means "fastest correct path for this backend"
+    return _spmm_block_fused(vals, src, wslot, B, bt=bt, t_tile=t_tile,
+                             interpret=interpret)

@@ -50,3 +50,24 @@ def spmm_block_ref(vals, idx, B, out_rows: int):
             acc = acc + tile.T @ brows
         C = C.at[cb].set(acc)
     return C.reshape(CB * bs, t)
+
+
+def spmm_block_fused_ref(vals, src, wslot, B, bt: int):
+    """Fused-gather semantics: C[cb] = sum_l w[cb,l] * vals[cb,l]^T @
+    B[src_rb rows, src_jb-th bt-wide column group].
+
+    vals: (CB, L, bs, bs); src: (CB, L, 2) [row-block, column group];
+    wslot: (CB, L); B: (s, t), t divisible by bt.  Returns (CB * bs, bt).
+    """
+    CB, L, bs, _ = vals.shape
+    s, t = B.shape
+    B4 = jnp.asarray(B).reshape(s // bs, bs, t // bt, bt)
+    C = jnp.zeros((CB, bs, bt), jnp.float32)
+    for cb in range(CB):
+        acc = jnp.zeros((bs, bt), jnp.float32)
+        for l in range(L):
+            tile = vals[cb, l].astype(jnp.float32)
+            brows = B4[src[cb, l, 0], :, src[cb, l, 1], :].astype(jnp.float32)
+            acc = acc + wslot[cb, l].astype(jnp.float32) * (tile.T @ brows)
+        C = C.at[cb].set(acc)
+    return C.reshape(CB * bs, bt)

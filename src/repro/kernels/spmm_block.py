@@ -1,8 +1,8 @@
-"""Block-sparse SpMM Pallas kernel: C = A^T B with A in block-ELL (TPU target).
+"""Block-sparse SpMM Pallas kernels: C = A^T B with A in block-ELL (TPU target).
 
 TPU adaptation of the paper's sparse local products (DESIGN.md section 3;
 the coded-matmul "block_sparse" backend in repro.core.coded_matmul is the
-SPMD consumer of this kernel):
+SPMD consumer of these kernels):
 unstructured CSR gathers do not map to the MXU, so A is stored as packed
 bs x bs tiles (repro.sparse.BlockELL).  Each output row-block rb consumes its
 stripe vals[rb, :] of packed tiles; the tile's *source row-block in B* is
@@ -10,9 +10,25 @@ scalar-prefetched from idx[rb, l], so the B tile DMA is issued ahead of the
 matmul.  Compute and HBM traffic scale with the number of LIVE tiles
 (nnz-proportional -- the paper's whole point), not with the dense dimensions.
 
+Two entry points:
+
+* ``spmm_block``   -- the plain kernel: idx addresses row-blocks of the B
+  operand as given.  The coded-matmul consumer formerly pre-stacked
+  B_k = vstack_l(w_kl B_{j_l}) on device to use it, which materialized an
+  O(max_degree * s) dense intermediate per worker.
+* ``spmm_block_fused`` -- the fused-gather kernel: the scalar prefetch
+  carries, per (cb, l) slot, the source *row-block* AND source *column
+  group* of the original (s, t) B plus a per-slot f32 weight; the BlockSpec
+  index_map DMAs tiles straight out of B and the kernel scales by the
+  prefetched weight.  No stacked copy of B ever exists -- HBM traffic is
+  live tiles only.  Off TPU (no env override, no explicit ``interpret``)
+  it dispatches to an XLA gather/einsum path with identical semantics:
+  the Pallas interpreter is a correctness tool, orders of magnitude
+  slower than compiled XLA, and would bury the nnz-proportional win.
+
 Grid: (CB, t_tiles, L) -- L innermost so each (rb, tt) output tile stays
 VMEM-resident across its accumulation; zero-padded slots multiply zero tiles
-and add nothing.
+(fused: weight 0.0) and add nothing.
 """
 
 from __future__ import annotations
@@ -99,3 +115,110 @@ def spmm_block(vals, idx, B, *, t_tile: int = 128,
         out_shape=jax.ShapeDtypeStruct((CB * bs, t), jnp.float32),
         interpret=interpret,
     )(idx.astype(jnp.int32), vals, B.reshape(s // bs, bs, t))
+
+
+# ------------------------------ fused gather --------------------------------
+
+def _fused_kernel(src_ref, w_ref, vals_ref, b_ref, o_ref):
+    cb = pl.program_id(0)
+    l = pl.program_id(2)
+
+    @pl.when(l == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = w_ref[cb, l].astype(jnp.float32)        # per-slot code weight
+    tile = vals_ref[0, 0].astype(jnp.float32)   # (bs, bs) tile of A
+    b = b_ref[0].astype(jnp.float32)            # (bs, t_tile) rows of B
+    # C[cb] += w * tile^T @ B[src_rb, :, src_jb-th column group]
+    o_ref[...] += w * jax.lax.dot_general(
+        tile, b, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "t_tile"))
+def _spmm_block_fused_jnp(vals, src, wslot, B, *, bt: int, t_tile: int = 0):
+    """XLA gather/einsum path with the fused kernel's exact semantics.
+
+    The only intermediates are (CB, L, bs, bt) -- proportional to packed
+    tile slots, never to max_degree * s.  Used off-TPU where compiled
+    Pallas is unavailable and the interpreter is too slow to be a backend.
+    """
+    del t_tile  # tiling is the compiler's business here
+    CB, L, bs, _ = vals.shape
+    s, t = B.shape
+    B4 = B.reshape(s // bs, bs, t // bt, bt)
+    bsel = B4[src[..., 0], :, src[..., 1], :]                # (CB, L, bs, bt)
+    scaled = vals.astype(jnp.float32) * wslot[..., None, None].astype(jnp.float32)
+    out = jnp.einsum("clio,clit->cot", scaled, bsel.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(CB * bs, bt)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "t_tile", "interpret"))
+def _spmm_block_fused_pallas(vals, src, wslot, B, *, bt: int,
+                             t_tile: int = 128, interpret: bool = False):
+    CB, L, bs, _ = vals.shape
+    s, t = B.shape
+    if bt % t_tile:
+        raise ValueError(f"bt={bt} not divisible by t_tile={t_tile}")
+    if t % bt:
+        raise ValueError(f"t={t} not divisible by column-group width bt={bt}")
+    if s % bs:
+        raise ValueError(f"s={s} not divisible by block size {bs}")
+
+    grid = (CB, bt // t_tile, L)
+    tpg = bt // t_tile  # t_tiles per column group
+
+    vals_spec = pl.BlockSpec(
+        (1, 1, bs, bs), lambda cb, tt, l, src_ref, w_ref: (cb, l, 0, 0)
+    )
+    # B viewed as (s/bs, bs, t): row-block src[cb,l,0], column tile tt of
+    # column group src[cb,l,1] -- the gather happens in the DMA, no stacked
+    # B copy is ever built.
+    b_spec = pl.BlockSpec(
+        (1, bs, t_tile),
+        lambda cb, tt, l, src_ref, w_ref: (
+            src_ref[cb, l, 0], 0, src_ref[cb, l, 1] * tpg + tt),
+    )
+    o_spec = pl.BlockSpec((bs, t_tile), lambda cb, tt, l, src_ref, w_ref: (cb, tt))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[vals_spec, b_spec],
+        out_specs=o_spec,
+    )
+    return pl.pallas_call(
+        _fused_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((CB * bs, bt), jnp.float32),
+        interpret=interpret,
+    )(src.astype(jnp.int32), wslot.astype(jnp.float32), vals,
+      B.reshape(s // bs, bs, t))
+
+
+def spmm_block_fused(vals, src, wslot, B, *, bt: int, t_tile: int = 128,
+                     interpret: bool | None = None):
+    """C_k = sum of w * tile^T @ B[row-block, column-group] over packed slots.
+
+    The fused-gather local product: A's packed tiles address the ORIGINAL
+    (s, t) operand B directly, so no (max_degree * s, bt) stacked copy is
+    materialized.
+
+    vals : (CB, L, bs, bs)  this worker's packed tiles of sparse A
+    src  : (CB, L, 2) int32 [source row-block of B (in s/bs), source column
+           group (in t/bt)]
+    wslot: (CB, L) f32      per-slot code weight (0.0 on padded slots)
+    B    : (s, t) with t divisible by bt, the column-group width.
+
+    Returns (CB * bs, bt) f32.  Dispatch: compiled Pallas on TPU; explicit
+    ``interpret`` or the REPRO_PALLAS_INTERPRET env force the Pallas path
+    (interpreted or compiled); otherwise off-TPU runs the XLA gather path
+    (same semantics, same nnz-proportional intermediates).
+    """
+    if (interpret is None and os.environ.get("REPRO_PALLAS_INTERPRET") is None
+            and jax.default_backend() != "tpu"):
+        return _spmm_block_fused_jnp(vals, src, wslot, B, bt=bt)
+    return _spmm_block_fused_pallas(vals, src, wslot, B, bt=bt, t_tile=t_tile,
+                                    interpret=resolve_interpret(interpret))

@@ -11,3 +11,8 @@ from repro.runtime.executor import (
     run_device_job,
     run_live_job,
 )
+
+# NOTE: repro.runtime.pack_cache is NOT imported here on purpose -- it pulls
+# in repro.core.coded_matmul (and therefore jax) at import time, while this
+# package stays importable before XLA_FLAGS are set (the subprocess-isolation
+# rule the spmd checks rely on).  Import it as repro.runtime.pack_cache.

@@ -17,9 +17,11 @@ Two modes:
 
 * ``run_device_job`` -- the SPMD device path: one coded matmul staged through
   ``repro.core.coded_matmul`` on a JAX mesh (workers = devices, decode = one
-  psum), with a selectable local-compute backend and an optional survivor
-  mask.  This is the bridge from the host master/worker protocol above to
-  the on-device execution the ROADMAP targets.
+  psum, or a psum_scatter with ``out_sharded=True``), with a selectable
+  local-compute backend (block_sparse packs are memoized via
+  ``repro.runtime.pack_cache``) and an optional survivor mask.  This is the
+  bridge from the host master/worker protocol above to the on-device
+  execution the ROADMAP targets.
 """
 
 from __future__ import annotations
@@ -138,6 +140,8 @@ def run_device_job(
     backend: str = "dense_scan",
     survivors=None,
     repeats: int = 3,
+    a_sparse=None,
+    out_sharded: bool = False,
 ) -> ExecutionReport:
     """One coded matmul on a JAX mesh via the revived SPMD path.
 
@@ -145,9 +149,13 @@ def run_device_job(
     ``repro.core.coded_matmul.CodedMatmulPlan``; ``mesh`` defaults to a 1-D
     mesh over every visible device (its axis size must equal
     ``plan.num_workers``).  ``backend`` selects the local-compute path
-    ("dense_scan" | "block_sparse").  The decode is folded into the device
-    program (one psum), so decode_wall_time is reported as 0 and the whole
-    staged computation is timed as compute.
+    ("dense_scan" | "block_sparse"); for block_sparse an ``a_sparse``
+    BlockELL may be supplied to skip re-packing A (and to hit the runtime
+    pack cache across calls).  ``out_sharded`` selects the scatter decode
+    (each device reduces only its block shard; see coded_matmul).  The
+    decode is folded into the device program (one collective), so
+    decode_wall_time is reported as 0 and the whole staged computation is
+    timed as compute.
     """
     import jax
     import jax.numpy as jnp
@@ -160,17 +168,27 @@ def run_device_job(
         mesh = compat.make_mesh((n_dev,), (axis_name,))
     surv_mask = None if survivors is None else np.asarray(survivors, dtype=bool)
 
-    a_sparse = None
+    pack = None
     if backend == "block_sparse":
         # pack on host BEFORE staging: the tile pack is static metadata and
-        # cannot be derived from a traced operand inside jit
-        from repro.sparse.blocksparse import dense_to_block_ell
-        a_sparse = dense_to_block_ell(np.asarray(A, dtype=np.float32))
+        # cannot be derived from a traced operand inside jit.  The pack is
+        # built against the ORIGINAL plan (survivor masking never changes
+        # it), so the cache also serves survivor-sweep callers.  The cache
+        # is identity-keyed, so only a caller-supplied a_sparse can ever hit
+        # it -- a freshly built BlockELL would just pin dead entries.
+        if a_sparse is not None:
+            from repro.runtime.pack_cache import get_pack
+            pack = get_pack(a_sparse, plan)
+        else:
+            from repro.core.coded_matmul import pack_worker_tiles
+            from repro.sparse.blocksparse import dense_to_block_ell
+            a_sparse = dense_to_block_ell(np.asarray(A, dtype=np.float32))
+            pack = pack_worker_tiles(a_sparse, plan)
     A = jnp.asarray(A, jnp.float32)
     B = jnp.asarray(B, jnp.float32)
     fn = jax.jit(lambda a, b: coded_matmul(
         a, b, plan, mesh, axis_name=axis_name, survivors=surv_mask,
-        backend=backend, a_sparse=a_sparse))
+        backend=backend, pack=pack, out_sharded=out_sharded))
     fn(A, B).block_until_ready()  # compile outside the timed region
     times = []
     result = None
@@ -190,7 +208,7 @@ def run_device_job(
         decode_wall_time=0.0,
         total_time=elapsed,
         decode_stats={"backend": backend, "max_degree": plan.max_degree,
-                      "on_device_decode": True},
+                      "on_device_decode": True, "out_sharded": out_sharded},
         blocks=[np.asarray(result)],
     )
 
@@ -214,10 +232,7 @@ def run_live_job(
     q: queue.Queue = queue.Queue()
     stop = threading.Event()
 
-    tasks = []
-    for w, rows in enumerate(code.worker_rows):
-        lo, hi = code.M.indptr[rows[0]], code.M.indptr[rows[-1] + 1]
-        tasks.append(w)
+    tasks = list(range(len(code.worker_rows)))
 
     def worker_fn(w: int):
         delay = straggler_sleep.get(w, 0.0)

@@ -1,0 +1,60 @@
+"""LRU cache for worker tile packs (the block_sparse backend's host metadata).
+
+``pack_worker_tiles`` is pure in its two inputs, both of which are reused
+heavily by the runtime: a training/serving loop packs the same BlockELL
+against the same plan on every step, and survivor-mask re-derivations
+(``plan.with_survivors``) never change the pack at all -- it depends only on
+``plan.cols``/``plan.weights``.  The cache key is identity of both objects
+(``id(ell), id(plan)``): BlockELL holds mutable ndarrays, so value-hashing
+would be both slow (it defeats the point of caching the pack) and unsound
+under in-place mutation.  Keying on identity is safe because the cache entry
+pins strong references to the keyed objects -- a live key id can never be
+recycled while its entry is resident.
+
+The runtime layer owns this cache (not core): core stays a pure library and
+callers that want caching pass the resulting pack via ``coded_matmul(...,
+pack=)``, which ``run_device_job`` does automatically.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+from repro.core.coded_matmul import CodedMatmulPlan, WorkerTilePack, pack_worker_tiles
+from repro.sparse.blocksparse import BlockELL
+
+_MAX_ENTRIES = 16
+
+# key -> (ell, plan, pack): the ell/plan refs pin the ids the key is built from
+_cache: OrderedDict[tuple[int, int], tuple[BlockELL, CodedMatmulPlan, WorkerTilePack]]
+_cache = OrderedDict()
+_hits = 0
+_misses = 0
+
+
+def get_pack(ell: BlockELL, plan: CodedMatmulPlan) -> WorkerTilePack:
+    """The pack for (ell, plan), computed at most once while both are alive."""
+    global _hits, _misses
+    key = (id(ell), id(plan))
+    hit = _cache.get(key)
+    if hit is not None:
+        _cache.move_to_end(key)
+        _hits += 1
+        return hit[2]
+    pack = pack_worker_tiles(ell, plan)
+    _cache[key] = (ell, plan, pack)
+    if len(_cache) > _MAX_ENTRIES:
+        _cache.popitem(last=False)
+    _misses += 1
+    return pack
+
+
+def cache_stats() -> dict:
+    return {"entries": len(_cache), "hits": _hits, "misses": _misses}
+
+
+def clear() -> None:
+    global _hits, _misses
+    _cache.clear()
+    _hits = 0
+    _misses = 0

@@ -2,8 +2,12 @@
 XLA_FLAGS=--xla_force_host_platform_device_count=8 (the main pytest process
 keeps the default single device per the project's dry-run isolation rule).
 
-Covers both local-compute backends (dense_scan and the block-sparse Pallas
-path) against the uncoded reference, with and without a straggler mask."""
+Covers both local-compute backends (dense_scan and the block-sparse
+fused-gather path) against the uncoded reference, with and without a
+straggler mask; the scatter decode (out_sharded=True) against the
+replicated decode, with and without a dead worker; and a jaxpr inspection
+proving the block_sparse path never materializes a (max_degree * s)-row
+stacked operand (the old B_tall gather)."""
 
 import os
 
@@ -15,6 +19,84 @@ import jax.numpy as jnp
 
 from repro import compat
 from repro.core.coded_matmul import coded_matmul, make_plan, uncoded_matmul_reference
+from repro.sparse import dense_to_block_ell
+
+
+def _walk_avals(jaxpr):
+    """Every output aval of every equation, descending into sub-jaxprs."""
+    from jax.core import ClosedJaxpr, Jaxpr
+
+    def subs(val):
+        if isinstance(val, ClosedJaxpr):
+            yield val.jaxpr
+        elif isinstance(val, Jaxpr):
+            yield val
+        elif isinstance(val, (list, tuple)):
+            for v in val:
+                yield from subs(v)
+
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            yield eqn.primitive.name, v.aval
+        for param in eqn.params.values():
+            for sub in subs(param):
+                yield from _walk_avals(sub)
+
+
+def check_no_stacked_intermediate(A, B, plan, mesh, ell, s):
+    """The nnz-proportional claim, enforced on the trace: no gather/reshape
+    in the block_sparse program may produce an array with a max_degree * s
+    dimension (the old stacked B_tall / stacked-operand row count)."""
+    closed = jax.make_jaxpr(lambda a, b: coded_matmul(
+        a, b, plan, mesh, backend="block_sparse", a_sparse=ell))(A, B)
+    stacked = plan.max_degree * s
+    offenders = [
+        (prim, tuple(aval.shape))
+        for prim, aval in _walk_avals(closed.jaxpr)
+        if getattr(aval, "shape", ()) and aval.shape[0] == stacked
+    ]
+    assert not offenders, (
+        f"block_sparse path materializes a {stacked}-row intermediate "
+        f"(max_degree={plan.max_degree} * s={s}): {offenders}")
+    # detector sensitivity: the OLD B_tall gather/transpose/reshape must trip
+    L, (_, t) = plan.max_degree, B.shape
+    n, bt = plan.n, t // plan.n
+
+    def old_stack(b):
+        bsel = jnp.take(b.reshape(s, n, bt), jnp.zeros((L,), jnp.int32), axis=1)
+        return bsel.transpose(1, 0, 2).reshape(L * s, bt)
+
+    tripped = [
+        aval for _, aval in _walk_avals(jax.make_jaxpr(old_stack)(B).jaxpr)
+        if getattr(aval, "shape", ()) and aval.shape[0] == stacked
+    ]
+    assert tripped, "jaxpr walker failed to flag the legacy stacked gather"
+
+
+def check_scatter_decode(A, B, plan, mesh, ell, C_ref):
+    """psum_scatter decode must agree with the replicated psum decode --
+    bit-for-bit on every backend, with and without a dead worker."""
+    masks = [None]
+    M = plan.coefficient_matrix()
+    for kill in range(plan.num_workers):
+        surv = np.ones(plan.num_workers, dtype=bool)
+        surv[kill] = False
+        if np.linalg.matrix_rank(M * surv[:, None]) >= plan.m * plan.n:
+            masks.append(surv)
+            break
+    for surv in masks:
+        tag = "all-alive" if surv is None else f"killed {int(np.flatnonzero(~surv)[0])}"
+        for backend in ("dense_scan", "block_sparse"):
+            kw = {"a_sparse": ell} if backend == "block_sparse" else {}
+            C_rep = coded_matmul(A, B, plan, mesh, survivors=surv,
+                                 backend=backend, **kw)
+            C_sc = coded_matmul(A, B, plan, mesh, survivors=surv,
+                                backend=backend, out_sharded=True, **kw)
+            assert np.array_equal(np.asarray(C_sc), np.asarray(C_rep)), (
+                f"scatter decode != replicated decode ({backend}, {tag})")
+            np.testing.assert_allclose(np.asarray(C_sc), np.asarray(C_ref),
+                                       atol=5e-2, rtol=1e-3)
+            print(f"  scatter decode ok ({backend}, {tag})")
 
 
 def main():
@@ -36,6 +118,11 @@ def main():
             np.testing.assert_allclose(np.asarray(C), np.asarray(C_ref),
                                        atol=5e-2, rtol=1e-3)
             print(f"coded_matmul ok m={m} n={n} backend={backend}")
+
+        ell = dense_to_block_ell(np.asarray(A, np.float32), block_size=8)
+        check_no_stacked_intermediate(A, B, plan, mesh, ell, s)
+        print(f"  no stacked (max_degree*s) intermediate (m={m} n={n})")
+        check_scatter_decode(A, B, plan, mesh, ell, C_ref)
 
         # fault tolerance: kill one worker, decode from survivors -- on both
         # backends (the decode re-derivation is backend-independent, but the

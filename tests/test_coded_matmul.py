@@ -9,6 +9,7 @@ import jax.numpy as jnp
 from repro.core.coded_matmul import (
     BACKENDS,
     CodedMatmulPlan,
+    _largest_tile,
     coded_matmul,
     make_plan,
     pack_worker_tiles,
@@ -80,6 +81,57 @@ def test_coded_matmul_single_device_block_sparse():
     np.testing.assert_allclose(np.asarray(C), np.asarray(C_ref), atol=1e-2, rtol=1e-3)
 
 
+def test_coded_matmul_out_sharded_matches_replicated_single_device():
+    # the scatter decode must agree with the replicated decode bit-for-bit
+    # (the 8-device + dead-worker variants live in spmd_coded_matmul_check)
+    mesh = _mesh_1d()
+    plan = make_plan(1, 1, num_workers=mesh.shape["model"], max_degree=1, seed=3)
+    rng = np.random.default_rng(2)
+    s, r, t = 24, 16, 12
+    A = jnp.asarray(rng.standard_normal((s, r)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((s, t)), jnp.float32)
+    for backend in BACKENDS:
+        C_rep = coded_matmul(A, B, plan, mesh, backend=backend)
+        C_sc = coded_matmul(A, B, plan, mesh, backend=backend, out_sharded=True)
+        np.testing.assert_array_equal(np.asarray(C_sc), np.asarray(C_rep))
+
+
+def test_coded_matmul_accepts_prebuilt_pack():
+    # a pack built once (e.g. by the runtime LRU cache) short-circuits
+    # re-packing and produces the same result as the a_sparse path
+    mesh = _mesh_1d()
+    plan = make_plan(1, 1, num_workers=mesh.shape["model"], max_degree=1, seed=3)
+    rng = np.random.default_rng(4)
+    s, r, t = 32, 16, 12
+    A_np = rng.standard_normal((s, r)).astype(np.float32)
+    A = jnp.asarray(A_np)
+    B = jnp.asarray(rng.standard_normal((s, t)), jnp.float32)
+    ell = dense_to_block_ell(A_np, block_size=8)
+    pack = pack_worker_tiles(ell, plan)
+    C_pack = coded_matmul(A, B, plan, mesh, backend="block_sparse", pack=pack)
+    C_ell = coded_matmul(A, B, plan, mesh, backend="block_sparse", a_sparse=ell)
+    np.testing.assert_array_equal(np.asarray(C_pack), np.asarray(C_ell))
+
+
+def test_coded_matmul_rejects_stale_pack():
+    # a pack built for a different A must be refused, not silently gathered
+    # out of range (XLA clamps indices, which would corrupt the result)
+    mesh = _mesh_1d()
+    plan = make_plan(1, 1, num_workers=mesh.shape["model"], max_degree=1, seed=3)
+    rng = np.random.default_rng(5)
+    A_big = rng.standard_normal((64, 16)).astype(np.float32)
+    pack = pack_worker_tiles(dense_to_block_ell(A_big, block_size=8), plan)
+    A = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)   # shorter s
+    B = jnp.asarray(rng.standard_normal((32, 12)), jnp.float32)
+    with pytest.raises(ValueError, match="different A"):
+        coded_matmul(A, B, plan, mesh, backend="block_sparse", pack=pack)
+    # wrong output tiling (r mismatch) is also refused
+    A2 = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    B2 = jnp.asarray(rng.standard_normal((64, 12)), jnp.float32)
+    with pytest.raises(ValueError, match="does not tile"):
+        coded_matmul(A2, B2, plan, mesh, backend="block_sparse", pack=pack)
+
+
 def test_coded_matmul_rejects_unknown_backend():
     mesh = _mesh_1d()
     plan = make_plan(1, 1, num_workers=mesh.shape["model"], max_degree=1, seed=3)
@@ -88,6 +140,18 @@ def test_coded_matmul_rejects_unknown_backend():
     with pytest.raises(ValueError, match="backend"):
         coded_matmul(A, B, plan, mesh, backend="nope")
     assert set(BACKENDS) == {"dense_scan", "block_sparse"}
+
+
+def test_largest_tile_picks_biggest_divisor_capped():
+    # the kernel tile width is the largest divisor of bt <= 128 -- never a
+    # degenerate whole-row tile when a proper divisor exists
+    assert _largest_tile(256) == 128
+    assert _largest_tile(128) == 128
+    assert _largest_tile(192) == 96   # old code would have fallen back to 192
+    assert _largest_tile(24) == 24
+    assert _largest_tile(130) == 65   # 65 divides 130 and is <= 128
+    assert _largest_tile(127) == 127  # prime <= 128: the row itself
+    assert _largest_tile(1) == 1
 
 
 def test_pack_worker_tiles_counts_live_tiles():

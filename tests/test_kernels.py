@@ -17,7 +17,7 @@ except ModuleNotFoundError:  # property sweeps skip; see module docstring
     given = settings = st = HealthCheck = None
 
 from repro.kernels import ops
-from repro.kernels.ref import coded_accum_ref, spmm_block_ref
+from repro.kernels.ref import coded_accum_ref, spmm_block_fused_ref, spmm_block_ref
 from repro.sparse import BlockELL, block_ell_to_dense, dense_to_block_ell
 
 if given is not None:
@@ -142,6 +142,83 @@ def test_spmm_block_auto_interpret_matches_ref_on_cpu():
     want = spmm_block_ref(vals, idx, B, out_rows=CB * bs)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                atol=1e-4, rtol=1e-4)
+
+
+# --------------------------- spmm_block_fused ------------------------------
+
+def _random_fused_operands(rng, bs, CB, L, s, n, bt, zero_slots=1):
+    vals = rng.standard_normal((CB, L, bs, bs)).astype(np.float32)
+    src = np.stack([rng.integers(0, s // bs, (CB, L)),
+                    rng.integers(0, n, (CB, L))], axis=-1).astype(np.int32)
+    w = rng.standard_normal((CB, L)).astype(np.float32)
+    if zero_slots:  # exercise padded-slot semantics: weight 0 kills the tile
+        w[:, -zero_slots:] = 0.0
+    B = rng.standard_normal((s, n * bt)).astype(np.float32)
+    return vals, src, w, B
+
+
+@pytest.mark.parametrize("bs", [8, 16])
+@pytest.mark.parametrize("CB,L,s,n,bt", [
+    (4, 3, 64, 2, 128),    # degree-ish L small, t_tile == bt
+    (2, 7, 32, 3, 24),     # ragged bt (t_tile == 24), higher degree
+    (3, 1, 48, 1, 32),     # single slot, single column group
+])
+def test_spmm_block_fused_sweep(bs, CB, L, s, n, bt):
+    rng = np.random.default_rng(hash((bs, CB, L, s, n, bt)) % 2**31)
+    vals, src, w, B = _random_fused_operands(rng, bs, CB, L, s, n, bt)
+    want = spmm_block_fused_ref(jnp.asarray(vals), jnp.asarray(src),
+                                jnp.asarray(w), jnp.asarray(B), bt)
+    # dense einsum oracle: scatter the pack back to a dense stacked product
+    dense_want = np.zeros((CB * bs, bt), np.float32)
+    B4 = B.reshape(s // bs, bs, n, bt)
+    for cb in range(CB):
+        for l in range(L):
+            brows = B4[src[cb, l, 0], :, src[cb, l, 1], :]
+            dense_want[cb * bs:(cb + 1) * bs] += w[cb, l] * np.einsum(
+                "io,it->ot", vals[cb, l], brows)
+    np.testing.assert_allclose(np.asarray(want), dense_want, atol=1e-4, rtol=1e-3)
+    # XLA gather path (the off-TPU default)
+    got = ops.spmm_block_fused(jnp.asarray(vals), jnp.asarray(src),
+                               jnp.asarray(w), jnp.asarray(B), bt=bt)
+    np.testing.assert_allclose(np.asarray(got), dense_want, atol=1e-4, rtol=1e-3)
+    # Pallas kernel body (interpreter), including the scalar-prefetched
+    # weight and the two-level (row-block, column-group) index map
+    got_pl = ops.spmm_block_fused(jnp.asarray(vals), jnp.asarray(src),
+                                  jnp.asarray(w), jnp.asarray(B), bt=bt,
+                                  t_tile=bt, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_pl), dense_want,
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_spmm_block_fused_matches_packed_coded_product():
+    """End-to-end over a real pack: the fused kernel on pack_worker_tiles
+    output equals the worker's coded combination sum_l w_l A_{i_l}^T B_{j_l}
+    computed densely, across every worker and degree the plan sampled."""
+    from repro.core.coded_matmul import make_plan, pack_worker_tiles
+
+    rng = np.random.default_rng(11)
+    plan = make_plan(2, 2, num_workers=8, seed=1)
+    s, r, t, bs = 32, 32, 24, 8
+    m, n = 2, 2
+    br, bt = r // m, t // n
+    mask = rng.random((s // bs, r // bs)) < 0.6
+    A = rng.standard_normal((s, r)) * np.kron(mask, np.ones((bs, bs)))
+    B = rng.standard_normal((s, t)).astype(np.float32)
+    ell = dense_to_block_ell(A.astype(np.float32), block_size=bs)
+    pack = pack_worker_tiles(ell, plan)
+    for k in range(plan.num_workers):
+        got = ops.spmm_block_fused(
+            jnp.asarray(pack.vals[k]), jnp.asarray(pack.src[k]),
+            jnp.asarray(pack.wslot[k]), jnp.asarray(B), bt=bt)
+        want = np.zeros((br, bt), np.float32)
+        for l in range(plan.max_degree):
+            wgt = plan.weights[k, l]
+            if wgt == 0.0:
+                continue
+            i, j = divmod(int(plan.cols[k, l]), n)
+            want += wgt * (A[:, i * br:(i + 1) * br].T
+                           @ B[:, j * bt:(j + 1) * bt])
+        np.testing.assert_allclose(np.asarray(got), want, atol=1e-3, rtol=1e-3)
 
 
 # ------------------------- format round-trips ------------------------------

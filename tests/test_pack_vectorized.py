@@ -1,0 +1,143 @@
+"""Equivalence of the vectorized host-packing paths against reference loops.
+
+``pack_worker_tiles`` and ``dense_to_block_ell`` are NumPy bucketed/argsort
+rewrites of what used to be pure-Python nested loops; these tests keep the
+loop implementations alive as oracles and assert exact (bit-for-bit) layout
+equality across plans, shapes, and densities."""
+
+import numpy as np
+import pytest
+
+from repro.core.coded_matmul import make_plan, pack_worker_tiles
+from repro.runtime import pack_cache
+from repro.sparse import BlockELL, block_ell_to_dense, dense_to_block_ell
+
+
+# ----------------------- reference implementations -------------------------
+
+def _dense_to_block_ell_ref(A, block_size=8, slots=None):
+    """The pre-vectorization per-column-block loop, kept as the oracle."""
+    rows, cols = A.shape
+    bs = block_size
+    RB, CB = rows // bs, cols // bs
+    tiles = A.reshape(RB, bs, CB, bs).transpose(2, 0, 1, 3)
+    live = np.abs(tiles).sum(axis=(2, 3)) > 0
+    per_cb = live.sum(axis=1)
+    L = int(slots if slots is not None else max(int(per_cb.max(initial=1)), 1))
+    vals = np.zeros((CB, L, bs, bs), dtype=A.dtype)
+    idx = np.zeros((CB, L), dtype=np.int32)
+    nnzb = np.zeros((CB,), dtype=np.int32)
+    for cb in range(CB):
+        rbs = np.flatnonzero(live[cb])
+        if len(rbs) > L:  # keep largest-energy tiles
+            energy = np.abs(tiles[cb, rbs]).sum(axis=(1, 2))
+            rbs = rbs[np.argsort(-energy)[:L]]
+            rbs.sort()
+        take = len(rbs)
+        vals[cb, :take] = tiles[cb, rbs]
+        idx[cb, :take] = rbs
+        nnzb[cb] = take
+    return BlockELL(vals=vals, idx=idx, nnzb=nnzb, shape=(rows, cols),
+                    block_size=bs)
+
+
+def _pack_worker_tiles_ref(ell, plan):
+    """Nested-loop packing in the fused-gather layout, kept as the oracle."""
+    s, r = ell.shape
+    bs = ell.block_size
+    m, n = plan.m, plan.n
+    br = r // m
+    CBl = br // bs
+    N, L = plan.cols.shape
+    per = [[[] for _ in range(CBl)] for _ in range(N)]
+    for k in range(N):
+        for l in range(L):
+            if plan.weights[k, l] == 0.0:
+                continue
+            i, j = divmod(int(plan.cols[k, l]), n)
+            for cb in range(CBl):
+                g = i * CBl + cb
+                for e in range(int(ell.nnzb[g])):
+                    per[k][cb].append((int(ell.idx[g, e]), j,
+                                       float(plan.weights[k, l]),
+                                       ell.vals[g, e]))
+    Lw = max(1, max((len(per[k][cb]) for k in range(N) for cb in range(CBl)),
+                    default=1))
+    vals = np.zeros((N, CBl, Lw, bs, bs), np.float32)
+    src = np.zeros((N, CBl, Lw, 2), np.int32)
+    wslot = np.zeros((N, CBl, Lw), np.float32)
+    live = np.zeros((N,), np.int64)
+    for k in range(N):
+        for cb in range(CBl):
+            for slot, (rb, j, w, tile) in enumerate(per[k][cb]):
+                vals[k, cb, slot] = tile
+                src[k, cb, slot] = (rb, j)
+                wslot[k, cb, slot] = w
+            live[k] += len(per[k][cb])
+    return vals, src, wslot, live
+
+
+# --------------------------------- tests -----------------------------------
+
+@pytest.mark.parametrize("bs,RB,CB,density,slots", [
+    (8, 6, 4, 0.3, None),
+    (8, 4, 4, 0.0, None),      # all-dead matrix
+    (16, 3, 5, 1.0, None),     # fully dense
+    (8, 8, 3, 0.6, 4),         # truncating slots: top-energy selection
+    (4, 2, 3, 0.5, 5),         # slots > live tiles: padding
+    (8, 2, 2, 0.9, 6),         # slots > RB: sentinel padding path
+])
+def test_dense_to_block_ell_matches_reference(bs, RB, CB, density, slots):
+    rng = np.random.default_rng(hash((bs, RB, CB, slots)) % 2**31)
+    mask = rng.random((RB, CB)) < density
+    A = rng.standard_normal((RB * bs, CB * bs)) * np.kron(mask, np.ones((bs, bs)))
+    got = dense_to_block_ell(A, block_size=bs, slots=slots)
+    want = _dense_to_block_ell_ref(A, block_size=bs, slots=slots)
+    np.testing.assert_array_equal(got.idx, want.idx)
+    np.testing.assert_array_equal(got.nnzb, want.nnzb)
+    np.testing.assert_array_equal(got.vals, want.vals)
+    assert got.shape == want.shape and got.block_size == want.block_size
+    if slots is None:
+        np.testing.assert_array_equal(block_ell_to_dense(got), A)
+
+
+@pytest.mark.parametrize("m,n,workers,s,bs,density", [
+    (2, 2, 8, 32, 8, 0.4),
+    (2, 3, 10, 48, 8, 0.15),
+    (4, 2, 12, 32, 16, 0.7),
+    (1, 1, 4, 16, 8, 0.0),     # empty operand: zero live tiles everywhere
+])
+def test_pack_worker_tiles_matches_reference(m, n, workers, s, bs, density):
+    rng = np.random.default_rng(hash((m, n, workers, s, bs)) % 2**31)
+    plan = make_plan(m, n, num_workers=workers, seed=7)
+    r = m * 2 * bs  # two column blocks per worker row-block
+    mask = rng.random((s // bs, r // bs)) < density
+    A = rng.standard_normal((s, r)) * np.kron(mask, np.ones((bs, bs)))
+    ell = dense_to_block_ell(A.astype(np.float32), block_size=bs)
+    got = pack_worker_tiles(ell, plan)
+    vals, src, wslot, live = _pack_worker_tiles_ref(ell, plan)
+    np.testing.assert_array_equal(got.vals, vals)
+    np.testing.assert_array_equal(got.src, src)
+    np.testing.assert_array_equal(got.wslot, wslot)
+    np.testing.assert_array_equal(got.live_tiles, live)
+    assert got.block_size == bs
+
+
+def test_pack_cache_identity_keyed_lru():
+    plan = make_plan(2, 2, num_workers=8, seed=0)
+    rng = np.random.default_rng(3)
+    A = rng.standard_normal((32, 32)).astype(np.float32)
+    ell = dense_to_block_ell(A, block_size=8)
+    pack_cache.clear()
+    p1 = pack_cache.get_pack(ell, plan)
+    p2 = pack_cache.get_pack(ell, plan)
+    assert p1 is p2, "same (ell, plan) objects must hit the cache"
+    stats = pack_cache.cache_stats()
+    assert stats["hits"] == 1 and stats["misses"] == 1
+    # a distinct (equal-valued) BlockELL is a different key: no false sharing
+    ell2 = dense_to_block_ell(A, block_size=8)
+    p3 = pack_cache.get_pack(ell2, plan)
+    assert p3 is not p1
+    np.testing.assert_array_equal(p3.vals, p1.vals)
+    pack_cache.clear()
+    assert pack_cache.cache_stats() == {"entries": 0, "hits": 0, "misses": 0}
