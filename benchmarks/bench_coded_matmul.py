@@ -1,7 +1,9 @@
 """SPMD integration benchmark (no paper figure -- the framework's own table):
 coded vs uncoded distributed matmul on a JAX mesh, across both local-compute
 backends (dense_scan vs the fused-gather block-sparse path), swept over
-block densities {2%, 10%, 30%}.
+block densities {2%, 10%, 30%}.  Driven through the ``repro.coded`` op API
+(one bound ``CodedOp`` per backend x decode layout; straggler decode via
+``with_survivors``).
 
 Runs in a subprocess with 8 host devices (this process keeps the default
 single-device platform).  Reports wall time per (density, backend), the
@@ -29,7 +31,8 @@ import json, sys, time
 import numpy as np
 import jax, jax.numpy as jnp
 from repro import compat
-from repro.core.coded_matmul import coded_matmul, make_plan, uncoded_matmul_reference
+from repro.coded import CodedMatmulConfig, from_plan
+from repro.core.coded_matmul import make_plan, uncoded_matmul_reference
 from repro.sparse import dense_to_block_ell
 
 FULL = bool(int(sys.argv[1])) if len(sys.argv) > 1 else False
@@ -44,6 +47,18 @@ bs = 8
 rng = np.random.default_rng(0)
 B = jnp.asarray(rng.standard_normal((s, t)), jnp.float32)
 unc = jax.jit(uncoded_matmul_reference)
+
+# one bound CodedOp per (backend x decode layout); packs resolve through the
+# op (and its pack cache) per operand below
+OPS = {
+    "dense_scan": from_plan(CodedMatmulConfig(
+        backend="dense_scan"), plan).bind(mesh),
+    "block_sparse": from_plan(CodedMatmulConfig(
+        backend="block_sparse", block_size=bs), plan).bind(mesh),
+    "block_sparse_scatter": from_plan(CodedMatmulConfig(
+        backend="block_sparse", block_size=bs, out_sharded=True),
+        plan).bind(mesh),
+}
 
 def bench(fn, *args):
     fn(*args).block_until_ready()
@@ -63,15 +78,10 @@ for density in DENSITIES:
     A = jnp.asarray(A_np, jnp.float32)
     # the tile pack is static metadata: build it on host, outside jit
     ell = dense_to_block_ell(np.asarray(A_np, np.float32), block_size=bs)
-    fns = {
-        "dense_scan": jax.jit(lambda a, b: coded_matmul(
-            a, b, plan, mesh, backend="dense_scan")),
-        "block_sparse": jax.jit(lambda a, b: coded_matmul(
-            a, b, plan, mesh, backend="block_sparse", a_sparse=ell)),
-        "block_sparse_scatter": jax.jit(lambda a, b: coded_matmul(
-            a, b, plan, mesh, backend="block_sparse", a_sparse=ell,
-            out_sharded=True)),
-    }
+    fns = {}
+    for name, op in OPS.items():
+        kw = {"a_sparse": ell} if op.needs_pack else {}
+        fns[name] = jax.jit(lambda a, b, op=op, kw=kw: op.apply(a, b, **kw))
     ref = unc(A, B)
     d = {"block_density": float(mask.mean()),
          "live_tile_fraction": float(ell.nnzb.sum()) / ((s // bs) * (r // bs))}
@@ -82,7 +92,8 @@ for density in DENSITIES:
     d["speedup_block_vs_dense"] = d["t_dense_scan"] / max(d["t_block_sparse"], 1e-12)
     out["densities"][f"{density:.2f}"] = d
 
-# fault tolerance at the middle density: kill worker 3, decode from survivors
+# fault tolerance at the middle density: kill worker 3, rebind the op to the
+# survivors (the pack is reused -- it depends only on the task table)
 density = DENSITIES[len(DENSITIES) // 2]
 mask = rng.random((s // bs, r // bs)) < density
 A_np = rng.standard_normal((s, r)) * np.kron(mask, np.ones((bs, bs)))
@@ -91,11 +102,13 @@ ell = dense_to_block_ell(np.asarray(A_np, np.float32), block_size=bs)
 ref = unc(A, B)
 surv = np.ones(8, dtype=bool); surv[3] = False
 for backend in ("dense_scan", "block_sparse"):
-    kw = {"a_sparse": ell} if backend == "block_sparse" else {}
+    kw = {"a_sparse": ell} if OPS[backend].needs_pack else {}
     try:
-        C2 = coded_matmul(A, B, plan, mesh, survivors=surv, backend=backend, **kw)
+        # with_survivors raises DecodingError (a ValueError) EAGERLY on
+        # rank loss, so the rebind must sit inside the recording try
+        C2 = OPS[backend].with_survivors(surv).apply(A, B, **kw)
         out[f"ft_err_{backend}"] = float(jnp.max(jnp.abs(C2 - ref)))
-    except ValueError:   # DecodingError is a ValueError: rank lost
+    except ValueError:   # rank lost: record the outcome, don't crash the bench
         out[f"ft_err_{backend}"] = float("nan")
 
 print(json.dumps(out))

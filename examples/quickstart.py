@@ -1,26 +1,33 @@
-"""Quickstart: the sparse code end to end in 60 seconds.
+"""Quickstart: the coded-matmul API end to end in 60 seconds.
 
   PYTHONPATH=src python examples/quickstart.py
 
-1. builds a sparse C = A^T B problem, splits it into m x n = 2 x 3 blocks,
-2. codes it across N = 12 workers with the Wave Soliton (P, S)-sparse code,
-3. declares two workers stragglers and never waits for them,
-4. decodes with the hybrid peeling + rooting decoder (Algorithm 1),
-5. checks the result against the direct product.
+One scheme registry entry drives BOTH execution paths from the same code
+design (``repro.coded``, DESIGN.md section 7):
+
+1. pick the paper's (P, S)-sparse code by name -- ``get_scheme("sparse_code")``;
+2. host path: ``scheme.instance(...)`` -> master/worker protocol with two
+   declared stragglers, hybrid peeling + rooting decode (Algorithm 1);
+3. device path: ``plan(config, ...)`` -> a ``CodedOp`` bound to an 8-device
+   SPMD mesh, applied, then rebound to survivors with ``with_survivors``;
+4. checks both against the direct product.
 """
+
+import os
+
+# 8 host devices for the SPMD op (must be set before jax initializes)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")
 
 import numpy as np
 import scipy.sparse as sp
 
-from repro.core import (
-    SparseCodeSpec, generate_coefficient_matrix, make_tasks, encode_blocks,
-    hybrid_decode,
-)
-from repro.core.encoder import split_blocks
+from repro.coded import CodedMatmulConfig, get_scheme, plan, scheme_names
+from repro.core.encoder import split_blocks, make_tasks, encode_blocks
 
 
-def main():
-    rng = np.random.default_rng(0)
+def host_path():
+    """The paper's protocol: code across 12 workers, never wait for two."""
     m, n, N = 2, 3, 12
     s, r, t = 4000, 1800, 2400
     A = sp.random(s, r, density=0.01, format="csc",
@@ -29,23 +36,20 @@ def main():
                   random_state=np.random.RandomState(1))
     print(f"A: {A.shape} nnz={A.nnz}   B: {B.shape} nnz={B.nnz}")
 
-    spec = SparseCodeSpec(m=m, n=n, num_workers=N, distribution="wave_soliton")
-    M = generate_coefficient_matrix(spec)
-    tasks = make_tasks(M)
-    print(f"coefficient matrix: {M.shape}, avg degree "
-          f"{M.nnz / N:.2f} (Theta(ln mn) -- the paper's overhead)")
+    scheme = get_scheme("sparse_code")     # any name in scheme_names()
+    code = scheme.instance(m, n, N, seed=0, distribution="wave_soliton")
+    print(f"scheme {code.name}: avg degree {code.M.nnz / N:.2f} "
+          f"(Theta(ln mn) -- the paper's overhead)")
 
     A_blocks, B_blocks = split_blocks(A, m), split_blocks(B, n)
-    results = [encode_blocks(t_, A_blocks, B_blocks, n) for t_ in tasks]
+    results = [encode_blocks(t_, A_blocks, B_blocks, n)
+               for t_ in make_tasks(code.M)]
 
     stragglers = {3, 7}
     finished = [k for k in range(N) if k not in stragglers]
     print(f"workers {sorted(stragglers)} are stragglers -> decoding from "
           f"{len(finished)} results")
-
-    blocks, stats = hybrid_decode(M[finished], [results[k] for k in finished])
-    print(f"decode: {stats.peels} peels, {stats.roots} rooting steps, "
-          f"{stats.axpys} sparse AXPYs")
+    blocks = code.decode(finished, dict(enumerate(results)))
 
     C = (A.T @ B).toarray()
     br, bt = r // m, t // n
@@ -53,8 +57,49 @@ def main():
         abs(blocks[i * n + j] - C[i*br:(i+1)*br, j*bt:(j+1)*bt]).max()
         for i in range(m) for j in range(n)
     )
-    print(f"max abs error vs direct product: {err:.2e}")
+    print(f"host path max abs error vs direct product: {err:.2e}")
     assert err < 1e-8
+
+
+def device_path():
+    """The same design as an SPMD op: plan -> bind -> apply (-> rebind)."""
+    import jax.numpy as jnp
+
+    from repro.core.coded_matmul import uncoded_matmul_reference
+
+    cfg = CodedMatmulConfig(scheme="sparse_code", backend="dense_scan")
+    op = plan(cfg, m=2, n=2, num_workers=8, seed=5).bind()  # mesh over all devices
+    print(f"device path: {op}")
+
+    rng = np.random.default_rng(0)
+    s, r, t = 64, 16, 24
+    A = jnp.asarray(rng.standard_normal((s, r)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((s, t)), jnp.float32)
+    C_ref = np.asarray(uncoded_matmul_reference(A, B))
+
+    C = np.asarray(op(A, B))
+    err = np.abs(C - C_ref).max()
+    print(f"all-alive max abs error: {err:.2e}")
+    assert err < 1e-2
+
+    # kill a worker whose loss keeps the code decodable, rebind, re-apply
+    M = op.plan_.coefficient_matrix()
+    for kill in range(op.num_workers):
+        surv = np.ones(op.num_workers, dtype=bool)
+        surv[kill] = False
+        if np.linalg.matrix_rank(M * surv[:, None]) >= 4:
+            break
+    C2 = np.asarray(op.with_survivors(surv)(A, B))
+    err2 = np.abs(C2 - C_ref).max()
+    print(f"killed worker {kill}: max abs error {err2:.2e} "
+          "(decoded from survivors, no recompute)")
+    assert err2 < 1e-2
+
+
+def main():
+    print(f"registered schemes: {', '.join(scheme_names())}")
+    host_path()
+    device_path()
     print("OK")
 
 

@@ -8,7 +8,7 @@ injected straggler -- the paper's experimental protocol in miniature
 import numpy as np
 import scipy.sparse as sp
 
-from repro.core import schemes
+from repro.coded import get_scheme
 from repro.core.encoder import split_blocks
 from repro.runtime import run_live_job
 
@@ -24,8 +24,8 @@ def main():
     A_blocks, B_blocks = split_blocks(A, m), split_blocks(B, n)
 
     for name, code in [
-        ("sparse_code", schemes.sparse_code(m, n, N=18, seed=0)),
-        ("uncoded", schemes.uncoded(m, n)),
+        ("sparse_code", get_scheme("sparse_code").instance(m, n, 18, seed=0)),
+        ("uncoded", get_scheme("uncoded").instance(m, n)),
     ]:
         # worker 0 sleeps 30s -- with the sparse code the master never waits;
         # the uncoded run must wait (we cap the demo by making it 1.5s there)

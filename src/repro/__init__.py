@@ -2,6 +2,8 @@
 production-grade JAX training/inference framework.
 
 Layers:
+  repro.coded     -- THE public coded-matmul API: scheme registry,
+                     CodedMatmulConfig, CodedOp (plan -> bind -> apply)
   repro.core      -- the paper's sparse code (degree design, encoder, hybrid decoder)
   repro.sparse    -- block-sparse substrate (host + JAX)
   repro.runtime   -- master/worker execution with straggler injection
@@ -10,6 +12,48 @@ Layers:
   repro.serving   -- KV cache, prefill/decode steps
   repro.kernels   -- Pallas TPU kernels (block-sparse SpMM, fused coded accumulation)
   repro.launch    -- production mesh, multi-pod dry-run, roofline, train/serve drivers
+
+The names in ``__all__`` resolve lazily (PEP 562): ``import repro`` stays
+dependency-free, and jax loads only when a jax-backed symbol (``CodedOp``
+and friends) is actually touched -- after the caller has set XLA_FLAGS.
 """
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"
+
+__all__ = [
+    "CodedMatmulConfig",
+    "CodedOp",
+    "Scheme",
+    "from_plan",
+    "get_scheme",
+    "plan",
+    "register_scheme",
+    "scheme_names",
+    "run_device_job",
+]
+
+# symbol -> home module (all resolved lazily)
+_EXPORTS = {
+    "CodedMatmulConfig": "repro.coded",
+    "CodedOp": "repro.coded",
+    "Scheme": "repro.coded",
+    "from_plan": "repro.coded",
+    "get_scheme": "repro.coded",
+    "plan": "repro.coded",
+    "register_scheme": "repro.coded",
+    "scheme_names": "repro.coded",
+    "run_device_job": "repro.runtime",
+}
+
+
+def __getattr__(name):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

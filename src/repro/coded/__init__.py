@@ -1,0 +1,62 @@
+"""repro.coded: the single public entry point for coded matmul.
+
+Three pieces (DESIGN.md section 7):
+
+* **scheme registry** (``register_scheme`` / ``get_scheme`` /
+  ``scheme_names``) -- every code design by name, producing both the host
+  ``CodeInstance`` and the device ``CodedMatmulPlan`` from one sampled
+  generator matrix;
+* **CodedMatmulConfig** -- frozen execution config, validated once at
+  construction against the scheme and backend registries;
+* **CodedOp** (``plan`` / ``from_plan`` -> ``bind`` -> apply) -- the op
+  object that owns backend dispatch, BlockELL packing, the runtime pack
+  cache, and survivor rebinding (``with_survivors``).
+
+Quick tour::
+
+    from repro.coded import CodedMatmulConfig, plan
+
+    cfg = CodedMatmulConfig(scheme="sparse_code", backend="block_sparse")
+    op = plan(cfg, m=2, n=2, num_workers=8).bind(mesh)
+    C = op(A, B, a_sparse=ell)                 # all workers
+    C = op.with_survivors(mask)(A, B, a_sparse=ell)  # straggler rebind
+
+Exports resolve lazily (PEP 562): importing the registry/config surface
+never pulls in jax, so ``repro.configs`` can validate against this package
+before XLA_FLAGS are set.
+"""
+
+from repro.coded.config import CodedMatmulConfig
+from repro.coded.registry import (
+    CodeDesign,
+    Scheme,
+    get_scheme,
+    register_scheme,
+    scheme_names,
+)
+
+__all__ = [
+    "CodedMatmulConfig",
+    "CodedOp",
+    "CodeDesign",
+    "Scheme",
+    "from_plan",
+    "get_scheme",
+    "plan",
+    "register_scheme",
+    "scheme_names",
+]
+
+_LAZY = {"CodedOp", "plan", "from_plan"}  # jax-importing surface (op.py)
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from repro.coded import op as _op
+
+        return getattr(_op, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -1,0 +1,59 @@
+"""Frozen configuration for one coded-matmul deployment.
+
+``CodedMatmulConfig`` replaces the flat-kwarg sprawl the legacy
+``coded_matmul(...)`` signature accreted (12 parameters, several valid for
+only one backend): every execution knob is validated ONCE at construction
+against the live registries (``repro.coded.registry`` for schemes,
+``repro.core.coded_backends`` for backends), so an op built from a config
+can never reach staging with an unknown scheme/backend, and new backends
+or schemes become legal values by registration alone -- no hardcoded
+tuples to desync.
+
+jax-free on purpose: ``repro.configs.ArchConfig`` embeds one of these and
+the config layer must stay importable before XLA_FLAGS are set.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import coded_backends
+from repro.coded import registry
+
+
+@dataclasses.dataclass(frozen=True)
+class CodedMatmulConfig:
+    """How a coded matmul executes (not WHAT it computes -- that is the plan).
+
+    scheme      -- code design name in the scheme registry
+    backend     -- local-compute strategy name in the backend registry
+    block_size  -- tile edge for auto-packing A on pack-consuming backends
+    out_sharded -- decode collective: False = replicated psum, True =
+                   psum_scatter (each device reduces only its block shard)
+    out_dtype   -- result dtype (any np.dtype spelling; normalized)
+    axis_name   -- the mesh axis that plays the worker axis
+    """
+
+    scheme: str = "sparse_code"
+    backend: str = "dense_scan"
+    block_size: int = 8
+    out_sharded: bool = False
+    out_dtype: str = "float32"
+    axis_name: str = "model"
+
+    def __post_init__(self):
+        registry.get_scheme(self.scheme)           # raises with known names
+        coded_backends.get_backend(self.backend)   # raises with known names
+        if self.block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {self.block_size}")
+        if not self.axis_name:
+            raise ValueError("axis_name must be a non-empty mesh axis name")
+        # normalize any dtype spelling (np.float32, "f4", jnp dtypes) to the
+        # canonical name so configs stay hashable and comparable
+        object.__setattr__(self, "out_dtype", np.dtype(self.out_dtype).name)
+
+    @property
+    def np_dtype(self) -> np.dtype:
+        return np.dtype(self.out_dtype)

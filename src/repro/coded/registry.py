@@ -1,0 +1,204 @@
+"""Scheme registry: every coded-computation scheme, selectable by name.
+
+A *scheme* is a code design in the block domain (paper section II): a rule
+for building the generator matrix M over the mn unknown block products.
+The registry gives each design one name and one object able to produce
+BOTH execution artifacts from the same sampled M:
+
+* ``Scheme.instance(...)``  -> ``repro.core.schemes.CodeInstance`` -- the
+  host master/worker path (event-driven simulation, live threads, peeling
+  decode);
+* ``Scheme.plan(...)``      -> ``repro.core.coded_matmul.CodedMatmulPlan``
+  -- the SPMD device path (one row per device, linear psum decode).
+
+Historically those two were built by unrelated code paths
+(``schemes.sparse_code`` vs ``make_plan``) that could silently disagree on
+the sampled code; here the device plan is derived from the *instance's own
+generator matrix*, so host and device execute the same design by
+construction (``plan.coefficient_matrix() == instance.M`` up to degree
+truncation -- test-enforced).
+
+This module is jax-free (numpy/scipy only); ``Scheme.plan`` imports the
+device-plan types lazily so the registry stays importable before XLA_FLAGS
+are set.
+
+Registering a new scheme::
+
+    @register_scheme("my_code")
+    def my_code(m, n, N, seed=0):      # -> CodeInstance
+        ...
+
+After that, ``get_scheme("my_code")`` serves both paths and the name is a
+legal ``CodedMatmulConfig.scheme`` value.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core import schemes as schemes_lib
+from repro.core.schemes import CodeInstance
+
+
+@dataclasses.dataclass(frozen=True)
+class CodeDesign:
+    """Static identity of a registry-built device plan (duck-typed stand-in
+    for ``SparseCodeSpec`` in ``CodedMatmulPlan.spec``: exposes the m/n/
+    num_workers the plan properties read, plus provenance)."""
+
+    m: int
+    n: int
+    num_workers: int
+    scheme: str
+    seed: int
+
+    @property
+    def mn(self) -> int:
+        return self.m * self.n
+
+
+@dataclasses.dataclass(frozen=True)
+class Scheme:
+    """One registered code design; builds host instances and device plans."""
+
+    name: str
+    builder: Callable[..., CodeInstance]   # (m, n, N, *, seed=..., **kw)
+    fixed_workers: bool = False            # uncoded: N is forced to m*n
+    truncates: bool = False                # degree-distribution designs get
+    #   the lockstep default truncation (~2 ln(mn)) in plan(); dense designs
+    #   keep every entry of their rows
+
+    def instance(self, m: int, n: int, num_workers: int | None = None,
+                 *, seed: int = 0, **kwargs) -> CodeInstance:
+        """The host-path realization (``CodeInstance``) of this design."""
+        if self.fixed_workers:
+            if num_workers not in (None, m * n):
+                raise ValueError(
+                    f"scheme {self.name!r} uses exactly m*n={m * n} workers, "
+                    f"got num_workers={num_workers}")
+            return self.builder(m, n)
+        if num_workers is None:
+            raise ValueError(f"scheme {self.name!r} needs num_workers")
+        return self.builder(m, n, num_workers, seed=seed, **kwargs)
+
+    def device_capable(self, m: int = 2, n: int = 2,
+                       num_workers: int | None = None, **kwargs) -> bool:
+        """Whether this design maps onto the SPMD path (one generator row
+        per worker = one device)."""
+        inst = self.instance(m, n, num_workers or 4 * m * n, **kwargs)
+        return all(len(rows) == 1 for rows in inst.worker_rows)
+
+    def plan(self, m: int, n: int, num_workers: int | None = None, *,
+             max_degree: int | None = None, seed: int = 0,
+             max_resample: int = 50, **kwargs):
+        """The device-path plan (``CodedMatmulPlan``) of the same design.
+
+        Derived from the instance's generator matrix: rows are truncated to
+        ``max_degree`` task slots (None = the instance's own max row degree,
+        i.e. no truncation), the truncated system is rank-checked, and the
+        linear decode matrix is its pseudo-inverse.  Resamples ``seed + i``
+        until full rank, exactly like ``make_plan``.
+        """
+        from repro.core.coded_matmul import CodedMatmulPlan
+        from repro.core.decoder import decode_matrix
+
+        d = m * n
+        if max_degree is None and self.truncates:
+            # the same lockstep default as make_plan: every device pays for
+            # the max degree, so cap it at ~2 ln(mn) (decodability re-checked)
+            max_degree = max(
+                1, min(d, int(np.ceil(2 * np.log(max(d, 2)) + 1))))
+        for attempt in range(max_resample):
+            inst = self.instance(m, n, num_workers, seed=seed + attempt,
+                                 **kwargs)
+            if any(len(rows) != 1 for rows in inst.worker_rows):
+                raise ValueError(
+                    f"scheme {self.name!r} assigns multiple generator rows "
+                    "per worker; it has no one-row-per-device SPMD plan")
+            N = inst.num_workers
+            M = inst.M.tocsr()
+            degrees = np.diff(M.indptr)
+            L = int(max_degree or max(1, degrees.max(initial=1)))
+            cols = np.zeros((N, L), dtype=np.int32)
+            weights = np.zeros((N, L), dtype=np.float32)
+            Mt = np.zeros((N, d))
+            for k in range(N):
+                lo, hi = M.indptr[k], M.indptr[k + 1]
+                take = min(hi - lo, L)
+                cols[k, :take] = M.indices[lo:lo + take]
+                weights[k, :take] = M.data[lo:lo + take]
+                Mt[k, M.indices[lo:lo + take]] = M.data[lo:lo + take]
+            if np.linalg.matrix_rank(Mt) >= d:
+                design = CodeDesign(m=m, n=n, num_workers=N,
+                                    scheme=self.name, seed=seed + attempt)
+                return CodedMatmulPlan(
+                    spec=design, cols=cols, weights=weights,
+                    decode=decode_matrix(Mt).astype(np.float32),
+                    max_degree=L)
+            if self.fixed_workers:
+                break  # deterministic design: resampling cannot help
+        raise RuntimeError(
+            f"scheme {self.name!r}: no full-rank truncated coefficient "
+            f"matrix after {max_resample} tries (max_degree={max_degree})")
+
+
+_REGISTRY: dict[str, Scheme] = {}
+
+
+def register_scheme(name: str, builder: Callable | None = None, *,
+                    fixed_workers: bool = False, truncates: bool = False):
+    """Register a scheme builder under ``name`` (usable as a decorator)."""
+
+    def _register(fn):
+        _REGISTRY[name] = Scheme(name=name, builder=fn,
+                                 fixed_workers=fixed_workers,
+                                 truncates=truncates)
+        return fn
+
+    if builder is None:
+        return _register
+    _register(builder)
+    return _REGISTRY[name]
+
+
+def get_scheme(name: str) -> Scheme:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"scheme {name!r} not in {scheme_names()}") from None
+
+
+def scheme_names() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+# ---------------------- built-in scheme registrations -----------------------
+# Builders normalize to (m, n, N, *, seed, **kw); the underlying ctors live
+# in repro.core.schemes and keep their positional signatures.
+
+register_scheme("uncoded", lambda m, n: schemes_lib.uncoded(m, n),
+                fixed_workers=True)
+register_scheme("sparse_code",
+                lambda m, n, N, *, seed=0, **kw:
+                schemes_lib.sparse_code(m, n, N, seed=seed, **kw),
+                truncates=True)
+register_scheme("lt_code",
+                lambda m, n, N, *, seed=0:
+                schemes_lib.lt_code(m, n, N, seed=seed),
+                truncates=True)
+register_scheme("sparse_mds",
+                lambda m, n, N, *, seed=0, **kw:
+                schemes_lib.sparse_mds_code(m, n, N, seed=seed, **kw))
+register_scheme("polynomial",
+                lambda m, n, N, *, seed=0:
+                schemes_lib.polynomial_code(m, n, N, seed=seed))
+register_scheme("mds",
+                lambda m, n, N, *, seed=0:
+                schemes_lib.mds_code(m, n, N, seed=seed))
+register_scheme("product",
+                lambda m, n, N, *, seed=0:
+                schemes_lib.product_code(m, n, N, seed=seed))

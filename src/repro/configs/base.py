@@ -12,6 +12,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from repro.coded.config import CodedMatmulConfig
+
 
 @dataclasses.dataclass(frozen=True)
 class MoEConfig:
@@ -75,18 +77,40 @@ class ArchConfig:
     opt_moe_shardmap_combine: bool = False  # hand-written shard_map MoE
     #   combine: sum each expert shard's contributions locally, psum ONE
     #   (Tl, d) bf16 tensor (vs GSPMD's (Tl*k, d) f32 gather-AR)
-    coded_backend: str = "dense_scan"  # local-compute backend for the coded
-    #   matmul device path (repro.core.coded_matmul.BACKENDS):
-    #   "dense_scan" = einsum over padded task slots; "block_sparse" =
-    #   per-worker fused-gather tiles through the kernels.spmm_block_fused
-    #   Pallas kernel (tiles DMA'd straight out of B; compute AND traffic
-    #   scale with live tiles, not dense dims)
+    # ---- coded-matmul deployment (repro.coded) --------------------------------
+    # `coded` is the authoritative execution config for the coded matmul
+    # device path (scheme, backend, decode layout, ...), validated at
+    # construction against the scheme/backend registries -- new backends
+    # registered in repro.core.coded_backends become legal values with no
+    # change here.  `coded_backend` survives as the legacy backend alias:
+    # its None default means "follow coded.backend" (so passing coded=
+    # alone is never clobbered by the alias default), a string value
+    # (init kwarg or dataclasses.replace) folds into `coded`, and reads
+    # always see the mirrored `coded.backend`.  Caveat: because the
+    # mirror is a stored string, `dataclasses.replace(cfg, coded=...)`
+    # with a DIFFERENT backend re-folds the old alias -- change backend
+    # via `coded_backend=` or `with_coded(...)`, which keeps both in sync.
+    coded: CodedMatmulConfig = CodedMatmulConfig()
+    coded_backend: Optional[str] = None
 
     def __post_init__(self):
-        if self.coded_backend not in ("dense_scan", "block_sparse"):
-            raise ValueError(
-                f"coded_backend {self.coded_backend!r}; expected "
-                "'dense_scan' or 'block_sparse'")
+        if (self.coded_backend is not None
+                and self.coded_backend != self.coded.backend):
+            # the alias was written: fold it into the authoritative config,
+            # which validates the name against the live backend registry
+            try:
+                folded = dataclasses.replace(self.coded,
+                                             backend=self.coded_backend)
+            except ValueError as e:
+                raise ValueError(f"coded_backend: {e}") from None
+            object.__setattr__(self, "coded", folded)
+        object.__setattr__(self, "coded_backend", self.coded.backend)
+
+    def with_coded(self, **kw) -> "ArchConfig":
+        """Replace fields of the embedded ``CodedMatmulConfig`` (keeping the
+        ``coded_backend`` alias mirror consistent)."""
+        new = dataclasses.replace(self.coded, **kw)
+        return dataclasses.replace(self, coded=new, coded_backend=new.backend)
 
     def with_opts(self, names) -> "ArchConfig":
         valid = {"fused_ce", "moe_local_dispatch", "onehot_cache",

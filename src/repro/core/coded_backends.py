@@ -1,0 +1,80 @@
+"""Registry of local-compute backends for the coded matmul device path.
+
+This module is deliberately jax-free: ``repro.configs`` validates
+``ArchConfig`` coded settings against it at import time, and the config
+layer must stay importable before XLA_FLAGS are set (the subprocess
+isolation rule the SPMD checks rely on).
+
+A backend is the strategy one worker uses to evaluate its coded
+combination ``sum_l w_kl A_{i_l}^T B_{j_l}`` on device.  The entry here
+carries the *metadata* the API layer needs for dispatch and validation;
+the staging function itself lives in ``repro.core.coded_matmul`` (which
+imports jax) and attaches when that module loads.  Registering a new
+backend therefore automatically:
+
+* makes it a legal value for ``CodedMatmulConfig.backend`` and
+  ``ArchConfig.coded_backend`` (no hardcoded tuples to desync), and
+* routes ``CodedOp`` dispatch once a ``local_product_factory`` is attached.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass
+class Backend:
+    """One registered local-compute strategy.
+
+    needs_pack: whether the backend consumes host-side static pack metadata
+    (a ``WorkerTilePack``) that must be built outside jit.
+    local_product_factory: attached by the implementing module; called as
+    ``factory(plan, pack, bt) -> (k, A, B) -> (br, bt)`` at staging time.
+    """
+
+    name: str
+    needs_pack: bool = False
+    doc: str = ""
+    local_product_factory: Optional[Callable] = None
+
+
+_REGISTRY: dict[str, Backend] = {}
+
+
+def register_backend(name: str, *, needs_pack: bool = False, doc: str = "") -> Backend:
+    """Register (or return the existing entry for) a backend name."""
+    if name in _REGISTRY:
+        return _REGISTRY[name]
+    entry = Backend(name=name, needs_pack=needs_pack, doc=doc)
+    _REGISTRY[name] = entry
+    return entry
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"backend {name!r} not in {backend_names()}") from None
+
+
+def backend_names() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def validate_backend(name: str) -> str:
+    get_backend(name)
+    return name
+
+
+# The two built-in strategies (module docstrings in core.coded_matmul):
+register_backend(
+    "dense_scan",
+    doc="lax.scan of dense einsum block products over the padded task slots",
+)
+register_backend(
+    "block_sparse", needs_pack=True,
+    doc="fused-gather Pallas SpMM over per-worker packed tiles of A "
+        "(compute and HBM traffic scale with live tiles)",
+)

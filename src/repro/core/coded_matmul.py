@@ -1,11 +1,18 @@
 """Coded distributed matmul as a JAX/shard_map primitive.
 
+The public entry point is ``repro.coded`` (scheme registry +
+``CodedMatmulConfig`` + ``CodedOp`` plan->bind->apply; DESIGN.md section
+7); this module holds the device-path machinery it stages --
+``CodedMatmulPlan``/``make_plan``, tile packing, backend local-product
+factories, and ``stage_coded_matmul`` -- plus the deprecated flat-kwarg
+``coded_matmul`` shim.
+
 Maps the paper's master/worker protocol onto an SPMD mesh axis:
 
 * worker k  = device k on the ``workers`` mesh axis (N devices);
 * its task  = row k of the coefficient matrix M (sampled on host, static);
 * local compute = sum_{l} w_kl * A_{i_l}^T B_{j_l}, via a pluggable backend
-  (see ``coded_matmul``'s ``backend`` argument);
+  (registered in ``repro.core.coded_backends``);
 * decode    = blocks = D @ C~  with D = pinv(M) precomputed on host, executed
   as one psum over the axis (decoding a full-rank linear code is linear, so
   on-device it collapses to a single fused contraction; the peeling/rooting
@@ -49,6 +56,7 @@ TPU adaptation notes (DESIGN.md section 3):
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -57,12 +65,15 @@ import scipy.sparse as sp
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.core import coded_backends
 from repro.core.decoder import DecodingError, decode_matrix
 from repro.core.encoder import SparseCodeSpec, generate_coefficient_matrix
 from repro.kernels import ops
 from repro.sparse.blocksparse import BlockELL, dense_to_block_ell
 
-BACKENDS = ("dense_scan", "block_sparse")
+# Snapshot of the registered backend names at import time; prefer
+# ``repro.core.coded_backends.backend_names()`` for an always-fresh view.
+BACKENDS = coded_backends.backend_names()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -281,39 +292,41 @@ def _largest_tile(bt: int, cap: int = 128) -> int:
     return 1
 
 
-def coded_matmul(
-    A: jax.Array,
-    B: jax.Array,
-    plan: CodedMatmulPlan,
-    mesh: jax.sharding.Mesh,
-    axis_name: str = "model",
-    survivors: np.ndarray | None = None,
-    out_dtype=jnp.float32,
-    backend: str = "dense_scan",
-    a_sparse: BlockELL | None = None,
-    block_size: int = 8,
-    pack: WorkerTilePack | None = None,
-    out_sharded: bool = False,
-) -> jax.Array:
-    """C = A^T B computed with the (P,S)-sparse code over a mesh axis.
+def _make_dense_scan_local_product(plan: CodedMatmulPlan, pack, bt: int):
+    cols_t = jnp.asarray(plan.cols)        # (N, L)
+    w_t = jnp.asarray(plan.weights)        # (N, L)
+    m, n = plan.m, plan.n
 
-    A: (s, r), B: (s, t), replicated over `axis_name` (the worker axis).
-    Returns C (r, t).  r % m == 0, t % n == 0 required, and the mesh axis
-    size must equal plan.num_workers.
+    def local_product(k, A_, B_):
+        return _local_dense_scan(A_, B_, cols_t[k], w_t[k], m, n)
 
-    backend selects the local-compute path (module docstring): "dense_scan"
-    or "block_sparse".  For "block_sparse", pass ``pack`` (a prebuilt
-    ``WorkerTilePack``, e.g. from the runtime pack cache) or ``a_sparse``
-    (a host ``BlockELL`` of A), or let A be packed automatically with
-    ``block_size``; additionally s and r/m must divide by the block size.
+    return local_product
 
-    out_sharded selects the decode collective: False (default) psums the
-    full (mn, br, bt) block tensor to every device; True reduce-scatters it
-    (``compat.psum_scatter``) so each device reduces only its shard, and C
-    is assembled outside the shard_map.  Both produce the same C.
-    """
-    if backend not in BACKENDS:
-        raise ValueError(f"backend {backend!r} not in {BACKENDS}")
+
+def _make_block_sparse_local_product(plan: CodedMatmulPlan, pack: WorkerTilePack,
+                                     bt: int):
+    vals_t = jnp.asarray(pack.vals)    # (N, CBl, Lw, bs, bs)
+    src_t = jnp.asarray(pack.src)      # (N, CBl, Lw, 2)
+    wsl_t = jnp.asarray(pack.wslot)    # (N, CBl, Lw)
+    t_tile = _largest_tile(bt)
+
+    def local_product(k, A_, B_):
+        # fused gather: tiles address the original B directly -- no
+        # stacked (max_degree * s, bt) copy is ever materialized
+        return ops.spmm_block_fused(vals_t[k], src_t[k], wsl_t[k], B_,
+                                    bt=bt, t_tile=t_tile)
+
+    return local_product
+
+
+coded_backends.get_backend("dense_scan").local_product_factory = (
+    _make_dense_scan_local_product)
+coded_backends.get_backend("block_sparse").local_product_factory = (
+    _make_block_sparse_local_product)
+
+
+def _check_operands(A, B, plan: CodedMatmulPlan, mesh, axis_name: str):
+    """Shared shape/mesh validation; returns (N, s, r, t, br, bt)."""
     N = mesh.shape[axis_name]
     if N != plan.num_workers:
         raise ValueError(f"mesh axis {axis_name}={N} != plan workers {plan.num_workers}")
@@ -322,63 +335,105 @@ def coded_matmul(
     _, t = B.shape
     if r % m or t % n:
         raise ValueError(f"A cols {r} % m={m} or B cols {t} % n={n} nonzero")
-    br, bt = r // m, t // n
+    return N, s, r, t, r // m, t // n
 
-    if survivors is not None:
-        plan = plan.with_survivors(np.asarray(survivors, dtype=bool))
-        alive = jnp.asarray(survivors, dtype=jnp.float32)
+
+def resolve_pack(
+    A,
+    plan: CodedMatmulPlan,
+    *,
+    pack: WorkerTilePack | None = None,
+    a_sparse: BlockELL | None = None,
+    block_size: int = 8,
+    num_workers: int,
+    s: int,
+    r: int,
+    br: int,
+) -> WorkerTilePack:
+    """Obtain-and-validate the worker tile pack for the block_sparse backend.
+
+    Accepts a prebuilt ``pack`` (e.g. from the runtime pack cache), an
+    ``a_sparse`` host BlockELL of A (packed here), or a concrete A (packed
+    with ``block_size``).  A pack built against different operands silently
+    gathers garbage (XLA clamps out-of-range indices), so the result is
+    always validated against the operand geometry before use.
+    """
+    n = plan.n
+    if pack is None:
+        if a_sparse is None and isinstance(A, jax.core.Tracer):
+            raise ValueError(
+                "backend='block_sparse' under jit needs a_sparse= (a host "
+                "BlockELL) or pack= (a WorkerTilePack): the tile pack is "
+                "static metadata and cannot be derived from a traced "
+                "operand")
+        ell = a_sparse if a_sparse is not None else dense_to_block_ell(
+            np.asarray(A, dtype=np.float32), block_size=block_size)
+        if ell.shape != (s, r):
+            raise ValueError(f"a_sparse shape {ell.shape} != A shape {(s, r)}")
+        pack = pack_worker_tiles(ell, plan)
+    if pack.vals.shape[0] != num_workers:
+        raise ValueError(
+            f"pack built for {pack.vals.shape[0]} workers, mesh has {num_workers}")
+    # a pack built against different operands silently gathers garbage
+    # (XLA clamps out-of-range indices), so validate it against (s, r)
+    bs_p = pack.block_size
+    if s % bs_p or pack.vals.shape[1] * bs_p != br:
+        raise ValueError(
+            f"pack (block_size={bs_p}, {pack.vals.shape[1]} column "
+            f"blocks) does not tile operands with s={s}, br={br}")
+    if int(pack.src[..., 0].max(initial=0)) >= s // bs_p:
+        raise ValueError(
+            f"pack row-block indices exceed s//bs={s // bs_p}: the pack "
+            "was built for a different A")
+    if int(pack.src[..., 1].max(initial=0)) >= n:
+        raise ValueError(
+            f"pack column-group indices exceed n={n}: the pack was "
+            "built for a different plan")
+    return pack
+
+
+def stage_coded_matmul(
+    A: jax.Array,
+    B: jax.Array,
+    plan: CodedMatmulPlan,
+    mesh: jax.sharding.Mesh,
+    *,
+    axis_name: str = "model",
+    alive: np.ndarray | None = None,
+    out_dtype=jnp.float32,
+    backend: str = "dense_scan",
+    pack: WorkerTilePack | None = None,
+    out_sharded: bool = False,
+) -> jax.Array:
+    """Stage the shard_map program for one coded matmul (the shared core).
+
+    ``plan`` must already be survivor-adjusted (its decode matrix re-derived
+    via ``with_survivors``) and ``alive`` is the matching worker-liveness
+    mask (None = all alive).  For backends with ``needs_pack``, ``pack``
+    must be pre-resolved (``resolve_pack``).  Both the legacy
+    ``coded_matmul`` shim and ``repro.coded.CodedOp`` funnel through here,
+    which is what makes old-vs-new bit-parity structural rather than
+    coincidental.
+    """
+    entry = coded_backends.get_backend(backend)
+    N, s, r, t, br, bt = _check_operands(A, B, plan, mesh, axis_name)
+    m, n = plan.m, plan.n
+
+    if alive is None:
+        alive_t = jnp.ones((N,), jnp.float32)
     else:
-        alive = jnp.ones((N,), jnp.float32)
+        alive_t = jnp.asarray(alive, dtype=jnp.float32)
 
-    cols_t = jnp.asarray(plan.cols)        # (N, L)
-    w_t = jnp.asarray(plan.weights)        # (N, L)
     D_t = jnp.asarray(plan.decode)         # (mn, N)
-
-    if backend == "block_sparse":
-        if pack is None:
-            if a_sparse is None and isinstance(A, jax.core.Tracer):
-                raise ValueError(
-                    "backend='block_sparse' under jit needs a_sparse= (a host "
-                    "BlockELL) or pack= (a WorkerTilePack): the tile pack is "
-                    "static metadata and cannot be derived from a traced "
-                    "operand")
-            ell = a_sparse if a_sparse is not None else dense_to_block_ell(
-                np.asarray(A, dtype=np.float32), block_size=block_size)
-            if ell.shape != (s, r):
-                raise ValueError(f"a_sparse shape {ell.shape} != A shape {(s, r)}")
-            pack = pack_worker_tiles(ell, plan)
-        if pack.vals.shape[0] != N:
-            raise ValueError(
-                f"pack built for {pack.vals.shape[0]} workers, mesh has {N}")
-        # a pack built against different operands silently gathers garbage
-        # (XLA clamps out-of-range indices), so validate it against (s, r)
-        bs_p = pack.block_size
-        if s % bs_p or pack.vals.shape[1] * bs_p != br:
-            raise ValueError(
-                f"pack (block_size={bs_p}, {pack.vals.shape[1]} column "
-                f"blocks) does not tile operands with s={s}, br={br}")
-        if int(pack.src[..., 0].max(initial=0)) >= s // bs_p:
-            raise ValueError(
-                f"pack row-block indices exceed s//bs={s // bs_p}: the pack "
-                "was built for a different A")
-        if int(pack.src[..., 1].max(initial=0)) >= n:
-            raise ValueError(
-                f"pack column-group indices exceed n={n}: the pack was "
-                "built for a different plan")
-        vals_t = jnp.asarray(pack.vals)    # (N, CBl, Lw, bs, bs)
-        src_t = jnp.asarray(pack.src)      # (N, CBl, Lw, 2)
-        wsl_t = jnp.asarray(pack.wslot)    # (N, CBl, Lw)
-        t_tile = _largest_tile(bt)
-
-        def local_product(k, A_, B_):
-            # fused gather: tiles address the original B directly -- no
-            # stacked (max_degree * s, bt) copy is ever materialized
-            return ops.spmm_block_fused(vals_t[k], src_t[k], wsl_t[k], B_,
-                                        bt=bt, t_tile=t_tile)
-    else:
-
-        def local_product(k, A_, B_):
-            return _local_dense_scan(A_, B_, cols_t[k], w_t[k], m, n)
+    if entry.needs_pack and pack is None:
+        raise ValueError(
+            f"backend {backend!r} needs a resolved WorkerTilePack "
+            "(see resolve_pack)")
+    if entry.local_product_factory is None:
+        raise ValueError(
+            f"backend {backend!r} is registered but has no "
+            "local_product_factory attached")
+    local_product = entry.local_product_factory(plan, pack, bt)
 
     mn = m * n
     mn_pad = -(-mn // N) * N  # scatter splits the block dim N ways
@@ -387,7 +442,7 @@ def coded_matmul(
         k = jax.lax.axis_index(axis_name)
         Ct = local_product(k, A_, B_)
         # decode contribution: blocks_c += D[c, k] * C~_k  (zeroed if dead)
-        contrib = (D_t[:, k] * alive[k])[:, None, None] * Ct[None]
+        contrib = (D_t[:, k] * alive_t[k])[:, None, None] * Ct[None]
         if out_sharded:
             contrib = jnp.pad(contrib, ((0, mn_pad - mn), (0, 0), (0, 0)))
             # each device reduces only its 1/N shard of the block dim
@@ -408,6 +463,83 @@ def coded_matmul(
     blocks = fn(A, B)                                      # (mn_pad, br, bt)
     C = blocks[:mn].reshape(m, n, br, bt).transpose(0, 2, 1, 3)
     return C.reshape(m * br, n * bt).astype(out_dtype)
+
+
+def _coded_matmul(
+    A: jax.Array,
+    B: jax.Array,
+    plan: CodedMatmulPlan,
+    mesh: jax.sharding.Mesh,
+    axis_name: str = "model",
+    survivors: np.ndarray | None = None,
+    out_dtype=jnp.float32,
+    backend: str = "dense_scan",
+    a_sparse: BlockELL | None = None,
+    block_size: int = 8,
+    pack: WorkerTilePack | None = None,
+    out_sharded: bool = False,
+) -> jax.Array:
+    """Flat-kwarg implementation behind the deprecated ``coded_matmul`` shim."""
+    coded_backends.get_backend(backend)  # raises "backend ... not in" early
+    N, s, r, t, br, bt = _check_operands(A, B, plan, mesh, axis_name)
+
+    alive = None
+    if survivors is not None:
+        plan = plan.with_survivors(np.asarray(survivors, dtype=bool))
+        alive = survivors
+
+    if coded_backends.get_backend(backend).needs_pack:
+        pack = resolve_pack(A, plan, pack=pack, a_sparse=a_sparse,
+                            block_size=block_size, num_workers=N,
+                            s=s, r=r, br=br)
+    return stage_coded_matmul(A, B, plan, mesh, axis_name=axis_name,
+                              alive=alive, out_dtype=out_dtype,
+                              backend=backend, pack=pack,
+                              out_sharded=out_sharded)
+
+
+def coded_matmul(
+    A: jax.Array,
+    B: jax.Array,
+    plan: CodedMatmulPlan,
+    mesh: jax.sharding.Mesh,
+    axis_name: str = "model",
+    survivors: np.ndarray | None = None,
+    out_dtype=jnp.float32,
+    backend: str = "dense_scan",
+    a_sparse: BlockELL | None = None,
+    block_size: int = 8,
+    pack: WorkerTilePack | None = None,
+    out_sharded: bool = False,
+) -> jax.Array:
+    """DEPRECATED flat-kwarg entry point; use ``repro.coded`` instead.
+
+    C = A^T B computed with the (P,S)-sparse code over a mesh axis.
+    A: (s, r), B: (s, t), replicated over `axis_name` (the worker axis).
+    Returns C (r, t).  r % m == 0, t % n == 0 required, and the mesh axis
+    size must equal plan.num_workers.
+
+    The replacement is the plan->bind->apply object API::
+
+        from repro.coded import CodedMatmulConfig, from_plan
+        op = from_plan(CodedMatmulConfig(backend=..., out_sharded=...),
+                       plan).bind(mesh)
+        C = op(A, B)                     # bit-identical to this function
+
+    This shim stays bit-identical to the new API (both funnel through
+    ``stage_coded_matmul``; parity is test-enforced) and will be removed
+    after one deprecation cycle.  See DESIGN.md section 7 for the API and
+    deprecation policy.
+    """
+    warnings.warn(
+        "coded_matmul(...) is deprecated: use repro.coded "
+        "(CodedMatmulConfig + plan/from_plan -> bind -> apply)",
+        DeprecationWarning, stacklevel=2)
+    return _coded_matmul(A, B, plan, mesh, axis_name=axis_name,
+                         survivors=survivors, out_dtype=out_dtype,
+                         backend=backend, a_sparse=a_sparse,
+                         block_size=block_size, pack=pack,
+                         out_sharded=out_sharded)
 
 
 def uncoded_matmul_reference(A, B):

@@ -269,7 +269,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         mesh = make_production_mesh(multi_pod=multi_pod)
     record = {"arch": arch, "shape": shape_name,
               "mesh": "multi" if multi_pod else "single",
-              "mesh_shape": dict(mesh.shape), "status": "ok"}
+              "mesh_shape": dict(mesh.shape), "status": "ok",
+              # the coded-matmul deployment this cell would run with
+              # (registry-validated at ArchConfig construction)
+              "coded": {"scheme": cfg.coded.scheme,
+                        "backend": cfg.coded.backend,
+                        "out_sharded": cfg.coded.out_sharded}}
     with meshctx.use_mesh(mesh):
         fn, args, in_sh, out_sh = build_cell(cfg, shape_name, mesh,
                                              scan_unroll=scan_unroll,

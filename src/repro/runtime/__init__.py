@@ -12,7 +12,27 @@ from repro.runtime.executor import (
     run_live_job,
 )
 
-# NOTE: repro.runtime.pack_cache is NOT imported here on purpose -- it pulls
-# in repro.core.coded_matmul (and therefore jax) at import time, while this
-# package stays importable before XLA_FLAGS are set (the subprocess-isolation
-# rule the spmd checks rely on).  Import it as repro.runtime.pack_cache.
+__all__ = [
+    "StragglerModel",
+    "NoStragglers",
+    "SlowWorkers",
+    "ExponentialStragglers",
+    "ShiftedExponential",
+    "ExecutionReport",
+    "run_coded_job",
+    "run_device_job",
+    "run_live_job",
+    "pack_cache",
+]
+
+
+def __getattr__(name):
+    # repro.runtime.pack_cache pulls in repro.core.coded_matmul (and
+    # therefore jax) at import time, while this package must stay importable
+    # before XLA_FLAGS are set (the subprocess-isolation rule the spmd
+    # checks rely on) -- so the submodule resolves lazily on first touch.
+    if name == "pack_cache":
+        import repro.runtime.pack_cache as pack_cache
+
+        return pack_cache
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -15,13 +15,13 @@ Two modes:
   stopping as soon as the collected rows are decodable.  Used by the
   straggler_sim example and the integration tests.
 
-* ``run_device_job`` -- the SPMD device path: one coded matmul staged through
-  ``repro.core.coded_matmul`` on a JAX mesh (workers = devices, decode = one
-  psum, or a psum_scatter with ``out_sharded=True``), with a selectable
-  local-compute backend (block_sparse packs are memoized via
-  ``repro.runtime.pack_cache``) and an optional survivor mask.  This is the
-  bridge from the host master/worker protocol above to the on-device
-  execution the ROADMAP targets.
+* ``run_device_job`` -- the SPMD device path: a thin timing wrapper over
+  ``repro.coded.CodedOp`` (workers = devices, decode = one psum, or a
+  psum_scatter with ``out_sharded=True``).  Backend dispatch, tile packing,
+  the pack cache, and survivor rebinding are owned by the op; this layer
+  only builds it, times the jitted apply, and wraps an ``ExecutionReport``
+  -- the bridge from the host master/worker protocol above to the
+  on-device execution the ROADMAP targets.
 """
 
 from __future__ import annotations
@@ -143,16 +143,16 @@ def run_device_job(
     a_sparse=None,
     out_sharded: bool = False,
 ) -> ExecutionReport:
-    """One coded matmul on a JAX mesh via the revived SPMD path.
+    """One coded matmul on a JAX mesh via the SPMD path (thin CodedOp wrapper).
 
     A, B: (s, r) / (s, t) arrays (numpy or jax).  ``plan`` is a
     ``repro.core.coded_matmul.CodedMatmulPlan``; ``mesh`` defaults to a 1-D
     mesh over every visible device (its axis size must equal
-    ``plan.num_workers``).  ``backend`` selects the local-compute path
-    ("dense_scan" | "block_sparse"); for block_sparse an ``a_sparse``
-    BlockELL may be supplied to skip re-packing A (and to hit the runtime
-    pack cache across calls).  ``out_sharded`` selects the scatter decode
-    (each device reduces only its block shard; see coded_matmul).  The
+    ``plan.num_workers``).  All execution policy lives in
+    ``repro.coded.CodedOp`` now: backend dispatch, BlockELL packing, the
+    runtime pack cache (hit when a caller-supplied ``a_sparse`` recurs),
+    and survivor rebinding.  This wrapper only builds the op, times its
+    jitted apply, and wraps the result in an ``ExecutionReport``.  The
     decode is folded into the device program (one collective), so
     decode_wall_time is reported as 0 and the whole staged computation is
     timed as compute.
@@ -160,35 +160,32 @@ def run_device_job(
     import jax
     import jax.numpy as jnp
 
-    from repro import compat
-    from repro.core.coded_matmul import coded_matmul
+    from repro.coded import CodedMatmulConfig, from_plan
 
-    if mesh is None:
-        n_dev = len(jax.devices())
-        mesh = compat.make_mesh((n_dev,), (axis_name,))
-    surv_mask = None if survivors is None else np.asarray(survivors, dtype=bool)
+    cfg = CodedMatmulConfig(backend=backend, axis_name=axis_name,
+                            out_sharded=out_sharded)
+    op = from_plan(cfg, plan).bind(mesh)
+    if survivors is not None:
+        op = op.with_survivors(survivors)
 
-    pack = None
-    if backend == "block_sparse":
+    kw = {}
+    if op.needs_pack:
         # pack on host BEFORE staging: the tile pack is static metadata and
-        # cannot be derived from a traced operand inside jit.  The pack is
-        # built against the ORIGINAL plan (survivor masking never changes
-        # it), so the cache also serves survivor-sweep callers.  The cache
-        # is identity-keyed, so only a caller-supplied a_sparse can ever hit
-        # it -- a freshly built BlockELL would just pin dead entries.
+        # cannot be derived from a traced operand inside jit.  A caller-
+        # supplied a_sparse goes through the op's pack cache (identity-keyed,
+        # so recurring ells hit); a freshly built BlockELL bypasses it --
+        # caching it would only pin dead entries.
         if a_sparse is not None:
-            from repro.runtime.pack_cache import get_pack
-            pack = get_pack(a_sparse, plan)
+            kw["pack"] = op.pack_for(a_sparse)
         else:
-            from repro.core.coded_matmul import pack_worker_tiles
             from repro.sparse.blocksparse import dense_to_block_ell
-            a_sparse = dense_to_block_ell(np.asarray(A, dtype=np.float32))
-            pack = pack_worker_tiles(a_sparse, plan)
+
+            ell = dense_to_block_ell(np.asarray(A, dtype=np.float32),
+                                     block_size=op.config.block_size)
+            kw["pack"] = op.pack_for(ell, use_cache=False)
     A = jnp.asarray(A, jnp.float32)
     B = jnp.asarray(B, jnp.float32)
-    fn = jax.jit(lambda a, b: coded_matmul(
-        a, b, plan, mesh, axis_name=axis_name, survivors=surv_mask,
-        backend=backend, pack=pack, out_sharded=out_sharded))
+    fn = jax.jit(lambda a, b: op.apply(a, b, **kw))
     fn(A, B).block_until_ready()  # compile outside the timed region
     times = []
     result = None
@@ -199,7 +196,8 @@ def run_device_job(
         times.append(time.perf_counter() - t0)
     elapsed = float(np.median(times))
 
-    used = int(surv_mask.sum()) if surv_mask is not None else plan.num_workers
+    used = (int(op.survivors.sum()) if op.survivors is not None
+            else plan.num_workers)
     return ExecutionReport(
         scheme=f"spmd_{backend}",
         workers_used=used,

@@ -11,9 +11,10 @@ under in-place mutation.  Keying on identity is safe because the cache entry
 pins strong references to the keyed objects -- a live key id can never be
 recycled while its entry is resident.
 
-The runtime layer owns this cache (not core): core stays a pure library and
-callers that want caching pass the resulting pack via ``coded_matmul(...,
-pack=)``, which ``run_device_job`` does automatically.
+The runtime layer owns this cache (not core): core stays a pure library.
+The consumer is ``repro.coded.CodedOp`` -- ``op.pack_for(ell)`` (and
+therefore ``op.apply(..., a_sparse=ell)``) consults it keyed on the op's
+BASE plan, so survivor rebinds of the same op share one pack.
 """
 
 from __future__ import annotations

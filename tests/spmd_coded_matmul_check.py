@@ -1,15 +1,20 @@
-"""Standalone SPMD check for coded_matmul, run by tests in a subprocess with
-XLA_FLAGS=--xla_force_host_platform_device_count=8 (the main pytest process
-keeps the default single device per the project's dry-run isolation rule).
+"""Standalone SPMD check for the coded-matmul op, run by tests in a
+subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8 (the main
+pytest process keeps the default single device per the project's dry-run
+isolation rule).
 
-Covers both local-compute backends (dense_scan and the block-sparse
-fused-gather path) against the uncoded reference, with and without a
-straggler mask; the scatter decode (out_sharded=True) against the
-replicated decode, with and without a dead worker; and a jaxpr inspection
+Covers the ``repro.coded`` CodedOp across both local-compute backends
+(dense_scan and the block-sparse fused-gather path) against the uncoded
+reference, with and without straggler masks; the scatter decode
+(out_sharded=True) against the replicated decode; a jaxpr inspection
 proving the block_sparse path never materializes a (max_degree * s)-row
-stacked operand (the old B_tall gather)."""
+stacked operand (the old B_tall gather); and the API-redesign acceptance
+matrix -- the new ``CodedOp.apply`` must be BIT-identical to the legacy
+``coded_matmul(...)`` shim for both backends x {all-alive, 1-dead, 2-dead}
+x {replicated, out_sharded} on the 8-device mesh."""
 
 import os
+import warnings
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
@@ -18,8 +23,30 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat
+from repro.coded import CodedMatmulConfig, from_plan
 from repro.core.coded_matmul import coded_matmul, make_plan, uncoded_matmul_reference
 from repro.sparse import dense_to_block_ell
+
+
+def _op(plan, mesh, backend, out_sharded=False):
+    cfg = CodedMatmulConfig(backend=backend, out_sharded=out_sharded)
+    return from_plan(cfg, plan).bind(mesh)
+
+
+def _kill_masks(plan, n_dead_options=(1, 2)):
+    """One survivor mask per dead-count that keeps the code decodable."""
+    M = plan.coefficient_matrix()
+    d = plan.m * plan.n
+    rng = np.random.default_rng(0)
+    masks = []
+    for n_dead in n_dead_options:
+        for _ in range(200):
+            surv = np.ones(plan.num_workers, dtype=bool)
+            surv[rng.choice(plan.num_workers, size=n_dead, replace=False)] = False
+            if np.linalg.matrix_rank(M * surv[:, None]) >= d:
+                masks.append(surv)
+                break
+    return masks
 
 
 def _walk_avals(jaxpr):
@@ -47,8 +74,8 @@ def check_no_stacked_intermediate(A, B, plan, mesh, ell, s):
     """The nnz-proportional claim, enforced on the trace: no gather/reshape
     in the block_sparse program may produce an array with a max_degree * s
     dimension (the old stacked B_tall / stacked-operand row count)."""
-    closed = jax.make_jaxpr(lambda a, b: coded_matmul(
-        a, b, plan, mesh, backend="block_sparse", a_sparse=ell))(A, B)
+    op = _op(plan, mesh, "block_sparse")
+    closed = jax.make_jaxpr(lambda a, b: op.apply(a, b, a_sparse=ell))(A, B)
     stacked = plan.max_degree * s
     offenders = [
         (prim, tuple(aval.shape))
@@ -76,27 +103,55 @@ def check_no_stacked_intermediate(A, B, plan, mesh, ell, s):
 def check_scatter_decode(A, B, plan, mesh, ell, C_ref):
     """psum_scatter decode must agree with the replicated psum decode --
     bit-for-bit on every backend, with and without a dead worker."""
-    masks = [None]
-    M = plan.coefficient_matrix()
-    for kill in range(plan.num_workers):
-        surv = np.ones(plan.num_workers, dtype=bool)
-        surv[kill] = False
-        if np.linalg.matrix_rank(M * surv[:, None]) >= plan.m * plan.n:
-            masks.append(surv)
-            break
+    masks = [None] + _kill_masks(plan, (1,))
     for surv in masks:
         tag = "all-alive" if surv is None else f"killed {int(np.flatnonzero(~surv)[0])}"
         for backend in ("dense_scan", "block_sparse"):
             kw = {"a_sparse": ell} if backend == "block_sparse" else {}
-            C_rep = coded_matmul(A, B, plan, mesh, survivors=surv,
-                                 backend=backend, **kw)
-            C_sc = coded_matmul(A, B, plan, mesh, survivors=surv,
-                                backend=backend, out_sharded=True, **kw)
+            op_rep = _op(plan, mesh, backend)
+            op_sc = _op(plan, mesh, backend, out_sharded=True)
+            if surv is not None:
+                op_rep = op_rep.with_survivors(surv)
+                op_sc = op_sc.with_survivors(surv)
+            C_rep = op_rep.apply(A, B, **kw)
+            C_sc = op_sc.apply(A, B, **kw)
             assert np.array_equal(np.asarray(C_sc), np.asarray(C_rep)), (
                 f"scatter decode != replicated decode ({backend}, {tag})")
             np.testing.assert_allclose(np.asarray(C_sc), np.asarray(C_ref),
                                        atol=5e-2, rtol=1e-3)
             print(f"  scatter decode ok ({backend}, {tag})")
+
+
+def check_old_new_parity(A, B, plan, mesh, ell):
+    """Acceptance matrix: CodedOp.apply bit-identical to legacy coded_matmul
+    for backends x {all-alive, 1-dead, 2-dead} x {replicated, scattered}.
+
+    The dead-worker axis only exists where the code can spare workers: a
+    plan with N - k < mn has no decodable k-dead mask at all (rank < mn is
+    certain), so the full 3-mask matrix is required exactly when
+    N - 2 > mn (e.g. the 2x2 plan on 8 devices)."""
+    masks = [None] + _kill_masks(plan, (1, 2))
+    if plan.num_workers - 2 > plan.m * plan.n:
+        assert len(masks) == 3, "no decodable 1- and 2-dead masks for this plan"
+    for surv in masks:
+        n_dead = 0 if surv is None else int((~surv).sum())
+        for backend in ("dense_scan", "block_sparse"):
+            kw = {"a_sparse": ell} if backend == "block_sparse" else {}
+            for out_sharded in (False, True):
+                op = _op(plan, mesh, backend, out_sharded)
+                if surv is not None:
+                    op = op.with_survivors(surv)
+                C_new = op.apply(A, B, **kw)
+                with warnings.catch_warnings():
+                    warnings.simplefilter("ignore", DeprecationWarning)
+                    C_old = coded_matmul(
+                        A, B, plan, mesh, survivors=surv, backend=backend,
+                        out_sharded=out_sharded, **kw)
+                assert np.array_equal(np.asarray(C_new), np.asarray(C_old)), (
+                    f"new API != legacy ({backend}, dead={n_dead}, "
+                    f"out_sharded={out_sharded})")
+                print(f"  old/new parity ok ({backend}, dead={n_dead}, "
+                      f"out_sharded={out_sharded})")
 
 
 def main():
@@ -113,33 +168,30 @@ def main():
         A = jnp.asarray(A * np.kron(mask, np.ones((8, 8))), jnp.float32)
         B = jnp.asarray(rng.standard_normal((s, t)), jnp.float32)
         C_ref = uncoded_matmul_reference(A, B)
+        ell = dense_to_block_ell(np.asarray(A, np.float32), block_size=8)
         for backend in ("dense_scan", "block_sparse"):
-            C = coded_matmul(A, B, plan, mesh, backend=backend)
+            kw = {"a_sparse": ell} if backend == "block_sparse" else {}
+            C = _op(plan, mesh, backend).apply(A, B, **kw)
             np.testing.assert_allclose(np.asarray(C), np.asarray(C_ref),
                                        atol=5e-2, rtol=1e-3)
-            print(f"coded_matmul ok m={m} n={n} backend={backend}")
+            print(f"coded op ok m={m} n={n} backend={backend}")
 
-        ell = dense_to_block_ell(np.asarray(A, np.float32), block_size=8)
         check_no_stacked_intermediate(A, B, plan, mesh, ell, s)
         print(f"  no stacked (max_degree*s) intermediate (m={m} n={n})")
         check_scatter_decode(A, B, plan, mesh, ell, C_ref)
+        check_old_new_parity(A, B, plan, mesh, ell)
 
-        # fault tolerance: kill one worker, decode from survivors -- on both
-        # backends (the decode re-derivation is backend-independent, but the
-        # masked psum must agree on-device either way)
-        M = plan.coefficient_matrix()
-        for kill in range(8):
-            surv = np.ones(8, dtype=bool)
-            surv[kill] = False
-            if np.linalg.matrix_rank(M * surv[:, None]) < m * n:
-                continue
+        # fault tolerance: kill one worker, rebind, decode from survivors --
+        # on both backends (the decode re-derivation is backend-independent,
+        # but the masked psum must agree on-device either way)
+        for surv in _kill_masks(plan, (1,)):
+            kill = int(np.flatnonzero(~surv)[0])
             for backend in ("dense_scan", "block_sparse"):
-                C2 = coded_matmul(A, B, plan, mesh, survivors=surv,
-                                  backend=backend)
+                kw = {"a_sparse": ell} if backend == "block_sparse" else {}
+                C2 = _op(plan, mesh, backend).with_survivors(surv).apply(A, B, **kw)
                 np.testing.assert_allclose(np.asarray(C2), np.asarray(C_ref),
                                            atol=5e-2, rtol=1e-3)
                 print(f"  survivor decode ok (killed worker {kill}, {backend})")
-            break
     print("ALL-OK")
 
 

@@ -1,0 +1,237 @@
+"""Tests for the repro.coded API redesign: scheme registry round-trips,
+CodedMatmulConfig validation, CodedOp lifecycle, legacy-shim parity and
+deprecation.  (The 8-device parity acceptance matrix lives in
+spmd_coded_matmul_check.py; everything here runs on the default single
+device.)"""
+
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro
+from repro.coded import (
+    CodedMatmulConfig,
+    from_plan,
+    get_scheme,
+    plan as plan_op,
+    register_scheme,
+    scheme_names,
+)
+from repro.core import schemes as schemes_lib
+from repro.core.coded_matmul import coded_matmul, make_plan, uncoded_matmul_reference
+from repro.core.decoder import DecodingError
+from repro.sparse import dense_to_block_ell
+
+
+def _mesh_1d(name="model"):
+    return jax.make_mesh((len(jax.devices()),), (name,))
+
+
+# ------------------------------ scheme registry ------------------------------
+
+def test_every_core_scheme_is_registered():
+    # every scheme in core/schemes.py is reachable by name via the registry
+    assert set(schemes_lib.SCHEMES) == set(scheme_names())
+
+
+@pytest.mark.parametrize("name", sorted(schemes_lib.SCHEMES))
+def test_registry_roundtrip_builds_decodable_instance(name):
+    m, n, N = 2, 3, 18
+    sch = get_scheme(name)
+    inst = sch.instance(m, n, None if name == "uncoded" else N, seed=0)
+    workers = list(range(inst.num_workers))
+    assert inst.can_decode(workers), f"{name}: not decodable with all workers"
+    assert inst.mn == m * n
+
+
+@pytest.mark.parametrize("name", ["uncoded", "sparse_code", "lt_code",
+                                  "sparse_mds", "polynomial", "product"])
+def test_registry_builds_device_plan_with_left_inverse_decode(name):
+    m, n = 2, 2
+    sch = get_scheme(name)
+    p = sch.plan(m, n, None if name == "uncoded" else 12, seed=0)
+    M = p.coefficient_matrix()
+    assert np.linalg.matrix_rank(M) == m * n
+    np.testing.assert_allclose(p.decode @ M, np.eye(m * n), atol=1e-4)
+
+
+def test_mds_scheme_has_no_device_plan():
+    # mds assigns n generator rows per worker: no one-row-per-device mapping
+    with pytest.raises(ValueError, match="multiple generator rows"):
+        get_scheme("mds").plan(2, 2, 8)
+    assert not get_scheme("mds").device_capable(2, 2, 8)
+    assert get_scheme("sparse_code").device_capable(2, 2, 8)
+
+
+def test_host_and_device_share_one_design():
+    # the plan's coefficient matrix IS the instance's generator matrix (up
+    # to lockstep degree truncation) when built from the same seed -- the
+    # silent-disagreement failure mode the registry exists to kill
+    m, n, N, seed = 2, 3, 16, 4
+    sch = get_scheme("sparse_code")
+    p = sch.plan(m, n, N, seed=seed, max_degree=m * n)  # no truncation
+    inst = sch.instance(m, n, N, seed=p.spec.seed)      # the accepted resample
+    np.testing.assert_allclose(p.coefficient_matrix(), inst.M.toarray(),
+                               atol=1e-6)
+
+
+def test_unknown_scheme_rejected_with_known_names():
+    with pytest.raises(ValueError, match="sparse_code"):
+        get_scheme("nope")
+
+
+def test_register_scheme_decorator_and_config_pickup():
+    name = "_test_identity_code"
+    try:
+        @register_scheme(name, fixed_workers=True)
+        def _identity(m, n):
+            return schemes_lib.uncoded(m, n)
+
+        assert name in scheme_names()
+        cfg = CodedMatmulConfig(scheme=name)   # registry-validated
+        op = plan_op(cfg, 1, 1).bind(_mesh_1d())
+        A = jnp.asarray(np.ones((8, 4)), jnp.float32)
+        B = jnp.asarray(np.ones((8, 4)), jnp.float32)
+        np.testing.assert_allclose(np.asarray(op(A, B)),
+                                   np.asarray(uncoded_matmul_reference(A, B)),
+                                   atol=1e-5)
+    finally:
+        from repro.coded import registry as registry_mod
+        registry_mod._REGISTRY.pop(name, None)
+
+
+# ----------------------------- CodedMatmulConfig -----------------------------
+
+def test_config_validates_against_registries_at_construction():
+    with pytest.raises(ValueError, match="backend"):
+        CodedMatmulConfig(backend="csr")
+    with pytest.raises(ValueError, match="scheme"):
+        CodedMatmulConfig(scheme="csr")
+    with pytest.raises(ValueError, match="block_size"):
+        CodedMatmulConfig(block_size=0)
+    with pytest.raises(ValueError, match="axis_name"):
+        CodedMatmulConfig(axis_name="")
+
+
+def test_config_normalizes_dtype_spellings():
+    for spelling in ("float32", np.float32, jnp.float32, "f4"):
+        assert CodedMatmulConfig(out_dtype=spelling).out_dtype == "float32"
+    assert CodedMatmulConfig(out_dtype=jnp.bfloat16).out_dtype == "bfloat16"
+    # frozen + normalized => usable as a dict key / hashable
+    assert hash(CodedMatmulConfig()) == hash(CodedMatmulConfig(out_dtype="f4"))
+
+
+# --------------------------------- CodedOp -----------------------------------
+
+def test_op_lifecycle_unbound_then_bound():
+    p = make_plan(1, 1, num_workers=len(jax.devices()), max_degree=1, seed=3)
+    op = from_plan(CodedMatmulConfig(), p)
+    assert not op.bound
+    A = jnp.zeros((8, 8), jnp.float32)
+    with pytest.raises(ValueError, match="unbound"):
+        op(A, A)
+    bound = op.bind(_mesh_1d())
+    assert bound.bound and not op.bound  # frozen: bind returns a new op
+    assert "workers=1" in repr(bound)
+
+
+def test_op_bind_validates_axis():
+    p = make_plan(1, 1, num_workers=len(jax.devices()), max_degree=1, seed=3)
+    with pytest.raises(ValueError, match="no axis"):
+        from_plan(CodedMatmulConfig(axis_name="tp"), p).bind(_mesh_1d("model"))
+    p9 = make_plan(2, 2, num_workers=9, seed=0)
+    with pytest.raises(ValueError, match="workers"):
+        from_plan(CodedMatmulConfig(), p9).bind(_mesh_1d())
+
+
+def test_op_with_survivors_raises_eagerly_and_resets():
+    p = make_plan(2, 2, num_workers=6, seed=1)
+    op = from_plan(CodedMatmulConfig(), p)
+    with pytest.raises(DecodingError, match="rank"):
+        op.with_survivors(np.zeros(6, dtype=bool))   # at rebind, not apply
+    # all-alive mask and None both restore the base plan
+    assert op.with_survivors(np.ones(6, dtype=bool)).plan_ is p
+    assert op.with_survivors(None).plan_ is p
+
+
+def test_op_strict_about_pack_operands():
+    p = make_plan(1, 1, num_workers=len(jax.devices()), max_degree=1, seed=3)
+    op = from_plan(CodedMatmulConfig(backend="dense_scan"), p).bind(_mesh_1d())
+    A = jnp.zeros((8, 8), jnp.float32)
+    ell = dense_to_block_ell(np.zeros((8, 8), np.float32), block_size=8)
+    with pytest.raises(ValueError, match="takes no a_sparse/pack"):
+        op(A, A, a_sparse=ell)
+
+
+def test_op_consults_runtime_pack_cache():
+    from repro.runtime import pack_cache
+
+    p = make_plan(1, 1, num_workers=len(jax.devices()), max_degree=1, seed=3)
+    rng = np.random.default_rng(0)
+    A_np = rng.standard_normal((16, 8)).astype(np.float32)
+    A = jnp.asarray(A_np)
+    B = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    ell = dense_to_block_ell(A_np, block_size=8)
+    op = from_plan(CodedMatmulConfig(backend="block_sparse"), p).bind(_mesh_1d())
+    pack_cache.clear()
+    op(A, B, a_sparse=ell)
+    op(A, B, a_sparse=ell)
+    stats = pack_cache.cache_stats()
+    assert stats["misses"] == 1 and stats["hits"] >= 1
+    # survivor rebinds reuse the same pack (keyed on the base plan)
+    op.with_survivors(np.ones(p.num_workers, dtype=bool))(A, B, a_sparse=ell)
+    assert pack_cache.cache_stats()["misses"] == 1
+    pack_cache.clear()
+
+
+def test_out_dtype_flows_through_op():
+    p = make_plan(1, 1, num_workers=len(jax.devices()), max_degree=1, seed=3)
+    op = from_plan(CodedMatmulConfig(out_dtype="bfloat16"), p).bind(_mesh_1d())
+    A = jnp.asarray(np.ones((8, 4)), jnp.float32)
+    assert op(A, A).dtype == jnp.bfloat16
+
+
+# ------------------------- legacy shim: parity + warning ---------------------
+
+def test_legacy_coded_matmul_emits_deprecation_warning():
+    p = make_plan(1, 1, num_workers=len(jax.devices()), max_degree=1, seed=3)
+    A = jnp.asarray(np.ones((8, 4)), jnp.float32)
+    with pytest.deprecated_call(match="repro.coded"):
+        coded_matmul(A, A, p, _mesh_1d())
+
+
+@pytest.mark.parametrize("backend", ["dense_scan", "block_sparse"])
+@pytest.mark.parametrize("out_sharded", [False, True])
+def test_old_new_bit_parity_single_device(backend, out_sharded):
+    p = make_plan(1, 1, num_workers=len(jax.devices()), max_degree=1, seed=3)
+    mesh = _mesh_1d()
+    rng = np.random.default_rng(7)
+    A_np = rng.standard_normal((24, 16)).astype(np.float32)
+    A = jnp.asarray(A_np)
+    B = jnp.asarray(rng.standard_normal((24, 12)), jnp.float32)
+    ell = dense_to_block_ell(A_np, block_size=8)
+    kw = {"a_sparse": ell} if backend == "block_sparse" else {}
+    op = from_plan(CodedMatmulConfig(backend=backend, out_sharded=out_sharded),
+                   p).bind(mesh)
+    C_new = op(A, B, **kw)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        C_old = coded_matmul(A, B, p, mesh, backend=backend,
+                             out_sharded=out_sharded, **kw)
+    np.testing.assert_array_equal(np.asarray(C_new), np.asarray(C_old))
+
+
+# ------------------------------ package surface ------------------------------
+
+def test_top_level_exports():
+    assert repro.CodedMatmulConfig is CodedMatmulConfig
+    assert repro.get_scheme is get_scheme
+    assert callable(repro.CodedOp)
+    assert callable(repro.run_device_job)
+    for name in repro.__all__:
+        assert getattr(repro, name) is not None

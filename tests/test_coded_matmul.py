@@ -6,17 +6,21 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from repro.coded import CodedMatmulConfig, from_plan
 from repro.core.coded_matmul import (
     BACKENDS,
     CodedMatmulPlan,
     _largest_tile,
-    coded_matmul,
     make_plan,
     pack_worker_tiles,
     uncoded_matmul_reference,
 )
 from repro.core.decoder import DecodingError
 from repro.sparse import dense_to_block_ell
+
+
+def _bound_op(plan, mesh, **cfg_kw):
+    return from_plan(CodedMatmulConfig(**cfg_kw), plan).bind(mesh)
 
 
 def _mesh_1d(name="model"):
@@ -45,7 +49,7 @@ def test_coded_matmul_single_device_mn1():
     s, r, t = 24, 8, 12
     A = jnp.asarray(rng.standard_normal((s, r)), jnp.float32)
     B = jnp.asarray(rng.standard_normal((s, t)), jnp.float32)
-    C = coded_matmul(A, B, plan, mesh)
+    C = _bound_op(plan, mesh)(A, B)
     C_ref = uncoded_matmul_reference(A, B)
     np.testing.assert_allclose(np.asarray(C), np.asarray(C_ref), atol=1e-2, rtol=1e-3)
 
@@ -76,7 +80,7 @@ def test_coded_matmul_single_device_block_sparse():
     A_np[:, 8:] = 0.0  # one dead column tile column: block sparsity is real
     A = jnp.asarray(A_np, jnp.float32)
     B = jnp.asarray(rng.standard_normal((s, t)), jnp.float32)
-    C = coded_matmul(A, B, plan, mesh, backend="block_sparse")
+    C = _bound_op(plan, mesh, backend="block_sparse")(A, B)
     C_ref = uncoded_matmul_reference(A, B)
     np.testing.assert_allclose(np.asarray(C), np.asarray(C_ref), atol=1e-2, rtol=1e-3)
 
@@ -91,8 +95,8 @@ def test_coded_matmul_out_sharded_matches_replicated_single_device():
     A = jnp.asarray(rng.standard_normal((s, r)), jnp.float32)
     B = jnp.asarray(rng.standard_normal((s, t)), jnp.float32)
     for backend in BACKENDS:
-        C_rep = coded_matmul(A, B, plan, mesh, backend=backend)
-        C_sc = coded_matmul(A, B, plan, mesh, backend=backend, out_sharded=True)
+        C_rep = _bound_op(plan, mesh, backend=backend)(A, B)
+        C_sc = _bound_op(plan, mesh, backend=backend, out_sharded=True)(A, B)
         np.testing.assert_array_equal(np.asarray(C_sc), np.asarray(C_rep))
 
 
@@ -108,8 +112,9 @@ def test_coded_matmul_accepts_prebuilt_pack():
     B = jnp.asarray(rng.standard_normal((s, t)), jnp.float32)
     ell = dense_to_block_ell(A_np, block_size=8)
     pack = pack_worker_tiles(ell, plan)
-    C_pack = coded_matmul(A, B, plan, mesh, backend="block_sparse", pack=pack)
-    C_ell = coded_matmul(A, B, plan, mesh, backend="block_sparse", a_sparse=ell)
+    op = _bound_op(plan, mesh, backend="block_sparse")
+    C_pack = op(A, B, pack=pack)
+    C_ell = op(A, B, a_sparse=ell)
     np.testing.assert_array_equal(np.asarray(C_pack), np.asarray(C_ell))
 
 
@@ -123,22 +128,21 @@ def test_coded_matmul_rejects_stale_pack():
     pack = pack_worker_tiles(dense_to_block_ell(A_big, block_size=8), plan)
     A = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)   # shorter s
     B = jnp.asarray(rng.standard_normal((32, 12)), jnp.float32)
+    op = _bound_op(plan, mesh, backend="block_sparse")
     with pytest.raises(ValueError, match="different A"):
-        coded_matmul(A, B, plan, mesh, backend="block_sparse", pack=pack)
+        op(A, B, pack=pack)
     # wrong output tiling (r mismatch) is also refused
     A2 = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
     B2 = jnp.asarray(rng.standard_normal((64, 12)), jnp.float32)
     with pytest.raises(ValueError, match="does not tile"):
-        coded_matmul(A2, B2, plan, mesh, backend="block_sparse", pack=pack)
+        op(A2, B2, pack=pack)
 
 
 def test_coded_matmul_rejects_unknown_backend():
-    mesh = _mesh_1d()
-    plan = make_plan(1, 1, num_workers=mesh.shape["model"], max_degree=1, seed=3)
-    A = jnp.zeros((8, 8), jnp.float32)
-    B = jnp.zeros((8, 8), jnp.float32)
+    # the config is the validation point now: an unknown backend never
+    # reaches staging (and the registry snapshot still lists the builtins)
     with pytest.raises(ValueError, match="backend"):
-        coded_matmul(A, B, plan, mesh, backend="nope")
+        CodedMatmulConfig(backend="nope")
     assert set(BACKENDS) == {"dense_scan", "block_sparse"}
 
 

@@ -86,6 +86,56 @@ def test_with_opts_rejects_bad_coded_backend():
         dataclasses.replace(cfg, coded_backend="csr")
 
 
+def test_coded_backend_validates_against_live_registry():
+    """No hardcoded backend tuple: a backend registered AFTER configs were
+    defined is immediately a legal coded_backend value."""
+    from repro.core import coded_backends
+
+    cfg = configs.get("internlm2-1.8b")
+    name = "_test_backend"
+    try:
+        coded_backends.register_backend(name, doc="registry-desync probe")
+        c2 = dataclasses.replace(cfg, coded_backend=name)
+        assert c2.coded.backend == name
+    finally:
+        coded_backends._REGISTRY.pop(name, None)
+
+
+def test_archconfig_embeds_coded_matmul_config():
+    from repro.coded import CodedMatmulConfig
+
+    cfg = configs.get("internlm2-1.8b")
+    assert isinstance(cfg.coded, CodedMatmulConfig)
+    # the alias mirrors the embedded config both ways
+    c2 = dataclasses.replace(cfg, coded_backend="block_sparse")
+    assert c2.coded.backend == "block_sparse"
+    c3 = cfg.with_coded(backend="block_sparse", out_sharded=True)
+    assert c3.coded_backend == "block_sparse" and c3.coded.out_sharded
+    # a later replace of the alias keeps the other coded knobs
+    c4 = dataclasses.replace(c3, coded_backend="dense_scan")
+    assert c4.coded.backend == "dense_scan" and c4.coded.out_sharded
+
+
+def test_archconfig_explicit_coded_not_clobbered_by_alias_default():
+    # passing coded= alone must win: the alias default (None = follow
+    # coded) may not silently reset an explicitly chosen backend
+    from repro.coded import CodedMatmulConfig
+
+    base = configs.get("internlm2-1.8b")
+    cfg = dataclasses.replace(
+        base, coded=CodedMatmulConfig(backend="block_sparse",
+                                      out_sharded=True),
+        coded_backend=None)
+    assert cfg.coded.backend == "block_sparse" and cfg.coded.out_sharded
+    assert cfg.coded_backend == "block_sparse"  # mirror follows coded
+    direct = ArchConfig(
+        name="t", family="dense", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=4, d_ff=128, vocab_size=512,
+        coded=CodedMatmulConfig(backend="block_sparse"))
+    assert direct.coded.backend == "block_sparse"
+    assert direct.coded_backend == "block_sparse"
+
+
 _DRYRUN_RECORDS_SCRIPT = r"""
 import os, sys
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
