@@ -19,7 +19,7 @@ import pathlib
 import subprocess
 import sys
 
-from benchmarks.common import Row
+from benchmarks.common import Row, merge_into_bench_json
 
 DENSITIES = (0.02, 0.10, 0.30)
 
@@ -128,7 +128,9 @@ def run(quick: bool = True):
         rows.append(Row("coded_matmul/ERROR", 0.0, proc.stderr[-200:]))
         return rows
     d = json.loads(proc.stdout.strip().splitlines()[-1])
-    (root / "BENCH_coded_matmul.json").write_text(json.dumps(d, indent=2) + "\n")
+    # merge: the completion suite persists its chunked sweep into the same
+    # artifact, so preserve keys this suite does not own
+    merge_into_bench_json(d)
     for key, dd in d["densities"].items():
         rows.append(Row(
             f"coded_matmul/dense_scan_8dev_d{key}", dd["t_dense_scan"] * 1e6,

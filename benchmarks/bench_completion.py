@@ -6,13 +6,19 @@ simulation charged from each scheme's per-worker cost factor; decode time is
 measured for real on actual sparse blocks.  Data = the paper's square / tall
 / fat random sparse matrices, dimension-scaled to the CPU budget (density
 regime preserved; see repro.configs.sparse_code_demo).
+
+Beyond the paper: the chunked-vs-atomic sweep (`_chunked_sweep`) measures
+the partial-straggler protocol (DESIGN.md section 8) at equal total work --
+q ordered sub-tasks per worker, master decodes from completed chunks -- and
+persists the result into BENCH_coded_matmul.json (merged, never clobbering
+the SPMD suite's keys) so CI tracks the chunked speedup as an artifact.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Row, sparse_bernoulli
+from benchmarks.common import Row, merge_into_bench_json, sparse_bernoulli
 from repro.configs.sparse_code_demo import BENCH_FAT, BENCH_SQUARE, BENCH_TALL
 from repro.core import schemes
 from repro.core.decoder import DecodingError
@@ -40,11 +46,11 @@ def _make_blocks(exp, rng):
 
 
 def run(quick: bool = True):
-    """Reproduction note (EXPERIMENTS.md): coded schemes beat uncoded only
-    when the straggler slowdown exceeds the coded scheme's effective degree
-    (~3-5 for the sparse code at mn=16).  The paper's background-load
-    stragglers are severe (uncoded/sparse ~ 3x in Table III); we report a
-    moderate (5x) and a severe (10x) regime."""
+    """Reproduction note: coded schemes beat uncoded only when the straggler
+    slowdown exceeds the coded scheme's effective degree (~3-5 for the
+    sparse code at mn=16).  The paper's background-load stragglers are
+    severe (uncoded/sparse ~ 3x in Table III); we report a moderate (5x)
+    and a severe (10x) regime."""
     rows = []
     datasets = [("square", BENCH_SQUARE), ("tall", BENCH_TALL), ("fat", BENCH_FAT)]
     trials = 3 if quick else 20
@@ -57,6 +63,49 @@ def run(quick: bool = True):
             _bench_one(rows, f"{dname}/slow{slow:g}x", blocks, m, n, N,
                        SlowWorkers(num_slow=exp.num_stragglers, slowdown=slow),
                        trials)
+    rows.extend(_chunked_sweep(quick))
+    return rows
+
+
+def _chunked_sweep(quick: bool = True):
+    """Chunked vs atomic completion time at equal total work (acceptance:
+    q >= 2 strictly below q = 1 under SlowWorkers).  Persisted under the
+    ``completion_chunked`` key of BENCH_coded_matmul.json."""
+    m = n = 4
+    N, num_slow, slowdown = 24, 6, 10.0
+    trials = 5 if quick else 25
+    rng = np.random.default_rng(3)
+    blocks = [rng.integers(-9, 10, size=(8, 8)).astype(np.float64)
+              for _ in range(m * n)]
+    strag = SlowWorkers(num_slow=num_slow, slowdown=slowdown)
+    code = schemes.sparse_code(m, n, N, seed=1)
+    sweep = {"m": m, "n": n, "num_workers": N, "num_slow": num_slow,
+             "slowdown": slowdown, "trials": trials, "q": {}}
+    rows = []
+    for q in (1, 2, 4, 8):
+        totals, chunks_used = [], []
+        for t in range(trials):
+            rep = run_coded_job(code, blocks, strag,
+                                rng=np.random.default_rng(100 + t),
+                                unit_block_time=0.05, num_chunks=q)
+            totals.append(rep.sim_compute_time)
+            chunks_used.append(rep.chunks_used)
+        mean_t = float(np.mean(totals))
+        sweep["q"][str(q)] = {"sim_compute_time": mean_t,
+                              "mean_chunks_used": float(np.mean(chunks_used))}
+        base = sweep["q"]["1"]["sim_compute_time"]
+        rows.append(Row(
+            f"completion_chunked/sparse_code_q{q}", mean_t * 1e6,
+            f"sim={mean_t:.4f}s vs_atomic={base / max(mean_t, 1e-12):.2f}x "
+            f"chunks={np.mean(chunks_used):.1f}"))
+    qs = sweep["q"]
+    sweep["chunked_strictly_faster"] = bool(
+        all(qs[str(q)]["sim_compute_time"] < qs["1"]["sim_compute_time"]
+            for q in (2, 4, 8)))
+    merge_into_bench_json({"completion_chunked": sweep})
+    rows.append(Row(
+        "completion_chunked/strictly_faster", 0.0,
+        str(sweep["chunked_strictly_faster"])))
     return rows
 
 

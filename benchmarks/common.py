@@ -2,10 +2,31 @@
 
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import numpy as np
 import scipy.sparse as sp
+
+BENCH_JSON = pathlib.Path(__file__).parents[1] / "BENCH_coded_matmul.json"
+
+
+def merge_into_bench_json(update: dict) -> None:
+    """Read-modify-write BENCH_coded_matmul.json.
+
+    Multiple suites persist into the one artifact CI uploads (the SPMD
+    sweep, the chunked completion sweep), so every writer merges its
+    top-level keys instead of clobbering the file.
+    """
+    data = {}
+    if BENCH_JSON.exists():
+        try:
+            data = json.loads(BENCH_JSON.read_text())
+        except json.JSONDecodeError:
+            data = {}
+    data.update(update)
+    BENCH_JSON.write_text(json.dumps(data, indent=2) + "\n")
 
 
 def sparse_bernoulli(rng, rows, cols, nnz):

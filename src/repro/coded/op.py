@@ -37,6 +37,7 @@ from repro.core.coded_matmul import (
     CodedMatmulPlan,
     WorkerTilePack,
     _check_operands,
+    chunk_mask_progress,
     resolve_pack,
     stage_coded_matmul,
 )
@@ -58,6 +59,7 @@ class CodedOp:
     base_plan: CodedMatmulPlan
     survivors: np.ndarray | None = None
     mesh: object | None = None
+    chunk_progress: np.ndarray | None = None  # (N,) chunks completed, if partial
 
     # ------------------------------ lifecycle -------------------------------
 
@@ -83,18 +85,32 @@ class CodedOp:
         return dataclasses.replace(self, mesh=mesh)
 
     def with_survivors(self, survivors) -> "CodedOp":
-        """Rebind to a worker-liveness mask (replaces any previous mask).
+        """Rebind to a liveness mask (replaces any previous mask).
 
-        The decode matrix is re-derived from the surviving rows NOW --
-        an undecodable mask raises ``DecodingError`` here, at rebind time.
-        Passing None (or an all-alive mask) restores the original plan.
+        ``survivors`` is an (N,) worker mask, or an (N, q) per-chunk
+        completion mask (prefix-form rows: ordered sub-task streams) -- a
+        device that completed only its first chunks contributes exactly
+        those slots to the decode instead of being zeroed wholesale.  The
+        decode matrix is re-derived NOW -- an undecodable mask raises
+        ``DecodingError`` here, at rebind time.  Tile packs are reused
+        either way: they depend only on the base task table.  Passing None
+        (or an all-complete mask) restores the original plan.
         """
         if survivors is None:
             return dataclasses.replace(self, plan_=self.base_plan,
-                                       survivors=None)
-        mask = np.asarray(survivors, dtype=bool).reshape(-1)
+                                       survivors=None, chunk_progress=None)
+        mask = np.asarray(survivors, dtype=bool)
+        if mask.ndim == 2:
+            progress = chunk_mask_progress(mask, self.base_plan.num_workers)
+            return dataclasses.replace(
+                self,
+                plan_=self.base_plan.with_chunk_progress(
+                    progress, mask.shape[1]),
+                survivors=progress > 0, chunk_progress=progress)
+        mask = mask.reshape(-1)
         return dataclasses.replace(
-            self, plan_=self.base_plan.with_survivors(mask), survivors=mask)
+            self, plan_=self.base_plan.with_survivors(mask), survivors=mask,
+            chunk_progress=None)
 
     # ------------------------------- execution ------------------------------
 
@@ -166,11 +182,13 @@ class CodedOp:
     def __repr__(self) -> str:  # the dataclass default dumps whole ndarrays
         surv = (None if self.survivors is None
                 else int(self.survivors.sum()))
+        chunks = ("" if self.chunk_progress is None
+                  else f", chunk_progress={self.chunk_progress.tolist()}")
         return (f"CodedOp(scheme={self.config.scheme!r}, "
                 f"backend={self.config.backend!r}, "
                 f"m={self.plan_.m}, n={self.plan_.n}, "
                 f"workers={self.num_workers}, "
-                f"survivors={surv}, bound={self.bound})")
+                f"survivors={surv}{chunks}, bound={self.bound})")
 
 
 def plan(config: CodedMatmulConfig, m: int, n: int,

@@ -16,9 +16,12 @@ from repro.core.encoder import (
     encode_blocks,
     block_col,
     col_block,
+    chunk_slices,
+    chunk_expand,
 )
 from repro.core.decoder import (
     DecodeStats,
+    IncrementalRankTracker,
     peel_schedule,
     hybrid_decode,
     gaussian_decode,

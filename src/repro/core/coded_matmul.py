@@ -67,13 +67,42 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.core import coded_backends
 from repro.core.decoder import DecodingError, decode_matrix
-from repro.core.encoder import SparseCodeSpec, generate_coefficient_matrix
+from repro.core.encoder import (
+    SparseCodeSpec,
+    chunk_slices,
+    generate_coefficient_matrix,
+)
 from repro.kernels import ops
 from repro.sparse.blocksparse import BlockELL, dense_to_block_ell
 
 # Snapshot of the registered backend names at import time; prefer
 # ``repro.core.coded_backends.backend_names()`` for an always-fresh view.
 BACKENDS = coded_backends.backend_names()
+
+
+def chunk_mask_progress(mask: np.ndarray, num_workers: int) -> np.ndarray:
+    """(N, q) per-chunk completion mask -> (N,) completed-prefix counts.
+
+    Sub-task streams are ordered, so only prefix-form rows (all True then
+    all False) describe a physical state; a True after a False means the
+    caller skipped a chunk and is rejected rather than silently reread.
+    """
+    mask = np.asarray(mask, dtype=bool)
+    if mask.ndim != 2:
+        raise ValueError(f"chunk mask must be 2-D (N, q), got shape {mask.shape}")
+    if mask.shape[0] != num_workers:
+        raise ValueError(
+            f"chunk mask has {mask.shape[0]} rows for {num_workers} workers")
+    progress = mask.sum(axis=1)
+    prefix = np.take_along_axis(
+        np.cumsum(mask, axis=1),
+        np.maximum(progress[:, None] - 1, 0), axis=1).reshape(-1)
+    bad = np.flatnonzero((progress > 0) & (prefix != progress))
+    if bad.size:
+        raise ValueError(
+            f"chunk mask rows {bad.tolist()} are not prefix-form: ordered "
+            "sub-task streams complete chunk c only after chunks 0..c-1")
+    return progress.astype(np.int64)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,11 +142,20 @@ class CodedMatmulPlan:
     def with_survivors(self, survivors: np.ndarray) -> "CodedMatmulPlan":
         """Re-derive the decode matrix using only surviving workers' rows.
 
-        survivors: boolean mask (N,).  Requires the surviving submatrix to be
-        full column rank (Theorem 2 says w.h.p. it is once >= ~mn survive);
-        raises ``DecodingError`` (a ValueError subclass) otherwise.
+        survivors: boolean mask (N,) -- worker liveness -- or (N, q) -- the
+        per-chunk completion mask of the chunked protocol, dispatched to
+        ``with_chunk_progress`` (a device that completed its first chunks
+        contributes those slots to the decode instead of being zeroed
+        wholesale).  Requires the surviving submatrix to be full column rank
+        (Theorem 2 says w.h.p. it is once >= ~mn survive); raises
+        ``DecodingError`` (a ValueError subclass) otherwise.
         """
-        survivors = np.asarray(survivors, dtype=bool).reshape(-1)
+        survivors = np.asarray(survivors, dtype=bool)
+        if survivors.ndim == 2:
+            return self.with_chunk_progress(
+                chunk_mask_progress(survivors, self.num_workers),
+                survivors.shape[1])
+        survivors = survivors.reshape(-1)
         if survivors.shape[0] != self.num_workers:
             raise ValueError(
                 f"survivors mask has {survivors.shape[0]} entries for "
@@ -134,6 +172,54 @@ class CodedMatmulPlan:
                 "decode; any full-column-rank subset would do (Theorem 2)")
         D = np.linalg.pinv(M_surv)
         return dataclasses.replace(self, decode=D.astype(np.float32))
+
+    def with_chunk_progress(
+        self, progress: np.ndarray, num_chunks: int
+    ) -> "CodedMatmulPlan":
+        """Partial-straggler rebind: keep each worker's completed slot prefix.
+
+        Chunk boundaries follow the SAME rule as the host task model
+        (``chunk_slices`` over each worker's actual degree -- its live slots
+        occupy a prefix of the padded table, padded slots carry weight 0 and
+        belong to no chunk), so "device k completed chunk c" and "worker k
+        completed chunk c" denote the same slots and host-observed progress
+        can drive this rebind directly.  ``progress[k]`` = chunks device k
+        completed; slots beyond its completed prefix get weight 0, the
+        decode matrix is the pseudo-inverse of the prefix-truncated
+        coefficient matrix, and the psum then sums exactly the completed
+        work.  Raises ``DecodingError`` when the completed prefixes lose
+        column rank.  Tile packs stay valid: they depend only on the *base*
+        task table, and the block_sparse local product re-reads weights from
+        the staged plan.
+        """
+        progress = np.asarray(progress, dtype=np.int64).reshape(-1)
+        if progress.shape[0] != self.num_workers:
+            raise ValueError(
+                f"progress has {progress.shape[0]} entries for "
+                f"{self.num_workers} workers")
+        if progress.min() < 0 or progress.max() > num_chunks:
+            raise ValueError(
+                f"progress must lie in [0, {num_chunks}], got {progress}")
+        if (progress == num_chunks).all():
+            return self
+        L = self.cols.shape[1]
+        degrees = np.count_nonzero(self.weights, axis=1)
+        keep = np.zeros((self.num_workers, L), dtype=bool)
+        for k, (deg, p) in enumerate(zip(degrees, progress)):
+            if p > 0:
+                keep[k, :chunk_slices(int(deg), num_chunks)[p - 1].stop] = True
+        weights = np.where(keep, self.weights, 0.0).astype(np.float32)
+        masked = dataclasses.replace(self, weights=weights)
+        d = self.m * self.n
+        M_eff = masked.coefficient_matrix()
+        rank = int(np.linalg.matrix_rank(M_eff))
+        if rank < d:
+            raise DecodingError(
+                f"completed chunk prefixes (progress={progress.tolist()}, "
+                f"q={num_chunks}) have rank {rank} < {d} -- cannot decode; "
+                "more chunks must finish")
+        D = np.linalg.pinv(M_eff)
+        return dataclasses.replace(masked, decode=D.astype(np.float32))
 
 
 def make_plan(
@@ -216,10 +302,16 @@ class WorkerTilePack:
       src  : (N, br/bs, Lw, 2) int32 [row-block of B in s/bs, column group
              j in n]
       wslot: (N, br/bs, Lw) f32      the slot's code weight w_kl (0 on pads)
+      slot_of: (N, br/bs, Lw) int32  originating task slot l of each tile
+             (0 on pads -- gate on wslot != 0)
 
     Weights stay per-slot (not folded into the tile values), and the pack
-    depends only on ``plan.cols``/``plan.weights`` -- never on the decode
-    matrix -- so one pack serves any survivor mask.
+    depends only on the BASE task table -- never on the decode matrix or
+    the currently staged weights -- so one pack serves any survivor mask.
+    ``slot_of`` is what makes that true under the chunked protocol: the
+    local product gathers the *staged plan's* weight for each tile through
+    it, so a chunk-masked plan (some slots zeroed by
+    ``with_chunk_progress``) reuses the very same pack.
     """
 
     vals: np.ndarray
@@ -227,6 +319,9 @@ class WorkerTilePack:
     wslot: np.ndarray
     block_size: int
     live_tiles: np.ndarray  # (N,) total live tiles per worker (cost proxy)
+    #: None only on packs from pre-chunking builders; the block_sparse
+    #: factory REFUSES those (it cannot follow a chunk-masked plan's weights)
+    slot_of: np.ndarray | None = None
 
 
 def pack_worker_tiles(a_sparse: BlockELL, plan: CodedMatmulPlan) -> WorkerTilePack:
@@ -268,13 +363,15 @@ def pack_worker_tiles(a_sparse: BlockELL, plan: CodedMatmulPlan) -> WorkerTilePa
     vals = np.zeros((N, CBl, Lw, bs, bs), dtype=np.float32)
     src = np.zeros((N, CBl, Lw, 2), dtype=np.int32)
     wslot = np.zeros((N, CBl, Lw), dtype=np.float32)
+    slot_of = np.zeros((N, CBl, Lw), dtype=np.int32)
     vals[kk, cc, dst] = a_sparse.vals[gg, ee]
     src[kk, cc, dst, 0] = a_sparse.idx[gg, ee]
     src[kk, cc, dst, 1] = j_blk[kk, ll]
     wslot[kk, cc, dst] = plan.weights[kk, ll]
+    slot_of[kk, cc, dst] = ll
     live = per_kcb.sum(axis=(1, 2)).astype(np.int64)
     return WorkerTilePack(vals=vals, src=src, wslot=wslot, block_size=bs,
-                          live_tiles=live)
+                          live_tiles=live, slot_of=slot_of)
 
 
 # ------------------------------- entry point --------------------------------
@@ -307,13 +404,30 @@ def _make_block_sparse_local_product(plan: CodedMatmulPlan, pack: WorkerTilePack
                                      bt: int):
     vals_t = jnp.asarray(pack.vals)    # (N, CBl, Lw, bs, bs)
     src_t = jnp.asarray(pack.src)      # (N, CBl, Lw, 2)
-    wsl_t = jnp.asarray(pack.wslot)    # (N, CBl, Lw)
     t_tile = _largest_tile(bt)
+    if pack.slot_of is None:
+        # a pack without the tile->slot map cannot follow a chunk-masked
+        # plan's weights; computing with its baked-in base weights would be
+        # silently wrong under with_chunk_progress, so refuse outright
+        raise ValueError(
+            "WorkerTilePack has no slot_of map (built by a pre-chunking "
+            "packer?); rebuild it with pack_worker_tiles")
+    # The pack carries the BASE task table's weights; the staged plan may
+    # have zeroed some (chunk-prefix masking).  Re-read each live tile's
+    # weight from the *current* plan through slot_of so one pack serves
+    # every chunk-progress rebind; for an unmasked plan this reproduces
+    # pack.wslot bit-for-bit (same f32 values, gathered instead of copied).
+    w_cur = jnp.asarray(plan.weights)                    # (N, L)
+    sl_t = jnp.asarray(pack.slot_of)                     # (N, CBl, Lw)
+    live_t = jnp.asarray(pack.wslot != 0.0)
+    N_ = plan.weights.shape[0]
+    wsl_all = jnp.where(
+        live_t, w_cur[jnp.arange(N_)[:, None, None], sl_t], 0.0)
 
     def local_product(k, A_, B_):
         # fused gather: tiles address the original B directly -- no
         # stacked (max_degree * s, bt) copy is ever materialized
-        return ops.spmm_block_fused(vals_t[k], src_t[k], wsl_t[k], B_,
+        return ops.spmm_block_fused(vals_t[k], src_t[k], wsl_all[k], B_,
                                     bt=bt, t_tile=t_tile)
 
     return local_product
@@ -485,8 +599,11 @@ def _coded_matmul(
 
     alive = None
     if survivors is not None:
-        plan = plan.with_survivors(np.asarray(survivors, dtype=bool))
-        alive = survivors
+        surv = np.asarray(survivors, dtype=bool)
+        plan = plan.with_survivors(surv)
+        # per-chunk masks collapse to worker liveness for the psum gate --
+        # the slot-level masking already lives in the rebuilt plan weights
+        alive = (chunk_mask_progress(surv, N) > 0) if surv.ndim == 2 else surv
 
     if coded_backends.get_backend(backend).needs_pack:
         pack = resolve_pack(A, plan, pack=pack, a_sparse=a_sparse,

@@ -39,6 +39,58 @@ class DecodingError(RuntimeError, ValueError):
     """
 
 
+class IncrementalRankTracker:
+    """Rank of a growing row set, maintained incrementally per arrival.
+
+    The master's event loop used to recompute ``matrix_rank`` of the full
+    collected submatrix on every arrival -- O(arrivals * rows * mn^2), the
+    loop's hot spot once tasks are chunk-granular (q x more events).  This
+    tracker keeps an orthonormal basis of the collected row space and updates
+    it per arrival with one modified-Gram-Schmidt pass (re-orthogonalized
+    twice for float robustness): O(mn * rank) per ``add``, so a whole job is
+    O(arrivals * mn * rank) instead.
+
+    Float caveat: rank decisions near the tolerance can disagree with an
+    exact check, so callers treating ``is_full`` as a decode gate should
+    confirm once with the exact test when it first fires (the executor
+    does) -- the tracker's job is to make the *per-event* check cheap, not
+    to be the final authority.
+    """
+
+    def __init__(self, dim: int, tol: float = 1e-10):
+        self.dim = int(dim)
+        self.tol = float(tol)
+        self.rank = 0
+        self._Q = np.zeros((self.dim, self.dim))  # rows 0..rank-1: the basis
+
+    @property
+    def is_full(self) -> bool:
+        return self.rank >= self.dim
+
+    def add(self, row: np.ndarray) -> bool:
+        """Fold one row in; returns True iff it increased the rank."""
+        if self.is_full:
+            return False
+        v = np.asarray(
+            row.toarray() if sp.issparse(row) else row, dtype=np.float64
+        ).reshape(-1)
+        if v.shape[0] != self.dim:
+            raise ValueError(f"row has {v.shape[0]} entries, tracker dim {self.dim}")
+        nv = np.linalg.norm(v)
+        if nv == 0.0 or not np.isfinite(nv):
+            return False
+        v = v / nv
+        Q = self._Q[: self.rank]
+        for _ in range(2):  # classic Gram-Schmidt with one re-orthogonalization
+            v = v - Q.T @ (Q @ v)
+        res = np.linalg.norm(v)
+        if res <= self.tol:
+            return False
+        self._Q[self.rank] = v / res
+        self.rank += 1
+        return True
+
+
 @dataclasses.dataclass
 class DecodeStats:
     peels: int = 0
@@ -75,8 +127,8 @@ def peel_schedule(
       "random"    -- paper's choice: uniformly random unrecovered block.
       "max_rows"  -- beyond-paper heuristic: pick the unrecovered block that
                      appears in the most active rows, maximizing the expected
-                     number of new ripples per rooting step (see EXPERIMENTS.md
-                     section Perf for the measured effect).
+                     number of new ripples per rooting step (see DESIGN.md
+                     section 2 for the measured effect).
       "fail"      -- raise DecodingError instead of rooting (pure peeling,
                      i.e. LT-code decoding semantics).
     """

@@ -25,6 +25,26 @@ def block_col(i: int, j: int, n: int) -> int:
     return i * n + j
 
 
+def chunk_slices(length: int, num_chunks: int) -> list[slice]:
+    """Balanced ordered split of ``range(length)`` into ``num_chunks`` slices.
+
+    The first ``length % num_chunks`` chunks get one extra element; chunks
+    beyond ``length`` are empty.  This is THE chunk boundary rule -- the host
+    task model, the chunk-expanded coefficient matrix, and the device
+    per-chunk survivor masks all call it, so a "chunk" means the same slot
+    range everywhere.
+    """
+    if num_chunks < 1:
+        raise ValueError(f"num_chunks must be >= 1, got {num_chunks}")
+    base, extra = divmod(length, num_chunks)
+    out, lo = [], 0
+    for c in range(num_chunks):
+        hi = lo + base + (1 if c < extra else 0)
+        out.append(slice(lo, hi))
+        lo = hi
+    return out
+
+
 def col_block(col: int, n: int) -> tuple[int, int]:
     return col // n, col % n
 
@@ -76,12 +96,30 @@ class CodedTask:
     cols: np.ndarray     # flat block indices, shape (degree,)
     weights: np.ndarray  # same shape
 
+    #: chunk index within the worker's ordered sub-task stream (None = the
+    #: whole task; set by ``chunks()``)
+    chunk: int | None = None
+
     @property
     def degree(self) -> int:
         return len(self.cols)
 
     def pairs(self, n: int) -> list[tuple[int, int, float]]:
         return [(c // n, c % n, float(w)) for c, w in zip(self.cols, self.weights)]
+
+    def chunks(self, num_chunks: int) -> list["CodedTask"]:
+        """Ordered chunk decomposition of this task (partial-straggler model).
+
+        The slot list is split into ``num_chunks`` contiguous sub-tasks via
+        ``chunk_slices``; sub-task c computes the partial combination over its
+        slots, so the full task result is the (ordered) sum of its chunk
+        results.  Chunks past the degree are empty tasks (zero contribution).
+        """
+        return [
+            CodedTask(worker=self.worker, cols=self.cols[sl],
+                      weights=self.weights[sl], chunk=c)
+            for c, sl in enumerate(chunk_slices(self.degree, num_chunks))
+        ]
 
 
 def generate_coefficient_matrix(
@@ -106,6 +144,35 @@ def generate_coefficient_matrix(
         shape=(spec.num_workers, d),
     )
     return M
+
+
+def chunk_expand(M: sp.spmatrix, num_chunks: int) -> sp.csr_matrix:
+    """Chunk-expanded coefficient matrix: row r splits into ``num_chunks``
+    ordered chunk rows.
+
+    Expanded row ``r * num_chunks + c`` carries the slots of chunk c of row r
+    (``chunk_slices`` over the row's nonzero slot list, CSR order).  Summing a
+    row's chunk rows reproduces the original row exactly (disjoint supports),
+    so the expanded system is a refinement of M: every completed *chunk* is
+    one usable equation over the mn unknown blocks, which is what lets the
+    master decode from partial stragglers.  ``num_chunks == 1`` returns M
+    itself (same sparsity, same values).
+    """
+    M = sp.csr_matrix(M)
+    if num_chunks == 1:
+        return M
+    R, d = M.shape
+    rows, cols, vals = [], [], []
+    for r in range(R):
+        lo, hi = M.indptr[r], M.indptr[r + 1]
+        for c, sl in enumerate(chunk_slices(hi - lo, num_chunks)):
+            idx = M.indices[lo + sl.start:lo + sl.stop]
+            rows.extend([r * num_chunks + c] * len(idx))
+            cols.extend(idx.tolist())
+            vals.extend(M.data[lo + sl.start:lo + sl.stop].tolist())
+    return sp.csr_matrix(
+        (np.asarray(vals, dtype=M.dtype), (rows, cols)),
+        shape=(R * num_chunks, d))
 
 
 def make_tasks(M: sp.csr_matrix) -> list[CodedTask]:

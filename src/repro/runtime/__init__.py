@@ -1,7 +1,10 @@
 from repro.runtime.straggler import (
     StragglerModel,
+    RateModel,
     NoStragglers,
     SlowWorkers,
+    SlowWorkerRates,
+    LogNormalRates,
     ExponentialStragglers,
     ShiftedExponential,
 )
@@ -14,8 +17,11 @@ from repro.runtime.executor import (
 
 __all__ = [
     "StragglerModel",
+    "RateModel",
     "NoStragglers",
     "SlowWorkers",
+    "SlowWorkerRates",
+    "LogNormalRates",
     "ExponentialStragglers",
     "ShiftedExponential",
     "ExecutionReport",

@@ -1,27 +1,39 @@
 """Master/worker execution of a coded matrix-multiplication job.
 
-Two modes:
+ONE master event loop (`_consume_events`, DESIGN.md section 8) consumes
+``(time, worker, chunk, payload)`` arrivals from pluggable event sources and
+stops at the first decodable chunk prefix.  Decodability is gated per event
+by an incremental rank tracker (``core.decoder.IncrementalRankTracker``,
+O(mn * rank) per arrival) and confirmed with the exact scheme test only when
+the tracker first fills -- the old per-event ``matrix_rank`` recompute is
+gone.  Tasks are chunk-granular (``CodeInstance.chunked(q)``): a straggler
+that finished q' < q of its ordered sub-tasks still contributes q' usable
+equations, the partial-straggler protocol of Das & Ramamoorthy
+(arXiv 2012.06065 / 2109.12070).  ``num_chunks=1`` is the paper's atomic
+protocol, same arrivals, same decode.
 
-* ``run_coded_job`` -- event-driven simulation.  Worker completion times are
-  drawn from (nominal-cost x straggler-model); the master replays arrivals in
-  time order, incrementally testing decodability, and decode time is measured
-  for real on the actual data.  This is the reproducible mode used by the
-  benchmark suite (the paper's Figs. 5-6 / Table III protocol: N workers, s
-  slowed, master polls with Waitany until enough results arrive).
+Three entry points share that loop or wrap the device path:
 
-* ``run_live_job`` -- actually-concurrent execution on a thread pool with
-  injected sleeps: workers compute real scipy.sparse block products and push
-  to a queue; the master consumes (the MPI Isend/Irecv/Waitany analogue),
-  stopping as soon as the collected rows are decodable.  Used by the
-  straggler_sim example and the integration tests.
+* ``run_coded_job`` -- event-driven simulation.  Chunk completion times are
+  drawn from (per-chunk nominal work x straggler model); the master replays
+  arrivals in time order, materializing worker results lazily (cost tracks
+  events consumed, not N), and decode time is measured for real on the
+  actual data.  The reproducible mode used by the benchmark suite (paper
+  Figs. 5-6 / Table III protocol, plus the chunked sweep).
+
+* ``run_live_job`` -- actually-concurrent execution on real threads with
+  injected sleeps: workers compute scipy.sparse chunk products and push to
+  a queue; the master consumes (the MPI Isend/Irecv/Waitany analogue)
+  through the same event loop.  A worker that hangs past ``timeout``
+  surfaces as a ``DecodingError`` naming the silent workers, never a bare
+  ``queue.Empty``.
 
 * ``run_device_job`` -- the SPMD device path: a thin timing wrapper over
   ``repro.coded.CodedOp`` (workers = devices, decode = one psum, or a
-  psum_scatter with ``out_sharded=True``).  Backend dispatch, tile packing,
-  the pack cache, and survivor rebinding are owned by the op; this layer
-  only builds it, times the jitted apply, and wraps an ``ExecutionReport``
-  -- the bridge from the host master/worker protocol above to the
-  on-device execution the ROADMAP targets.
+  psum_scatter with ``out_sharded=True``).  ``survivors`` may be the usual
+  (N,) liveness mask or an (N, q) per-chunk mask -- a device that completed
+  only its first chunks contributes those rows to the decode instead of
+  being zeroed wholesale.
 """
 
 from __future__ import annotations
@@ -30,14 +42,14 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Sequence
+from typing import Iterator, Sequence
 
 import numpy as np
 import scipy.sparse as sp
 
-from repro.core.decoder import DecodingError
-from repro.core.encoder import encode_blocks, CodedTask
-from repro.core.schemes import CodeInstance
+from repro.core.decoder import DecodingError, IncrementalRankTracker
+from repro.core.encoder import encode_blocks, make_tasks
+from repro.core.schemes import ChunkedCode, CodeInstance
 
 
 @dataclasses.dataclass
@@ -50,34 +62,153 @@ class ExecutionReport:
     total_time: float             # sim_compute_time + decode_wall_time
     decode_stats: dict
     blocks: list | None = None
+    num_chunks: int = 1           # sub-tasks per worker (1 = atomic protocol)
+    chunks_used: int = 0          # chunk arrivals consumed before decoding
 
     def summary(self) -> str:
-        return (f"{self.scheme}: waited {self.workers_used}/{self.num_workers} workers, "
+        chunks = (f" ({self.chunks_used} chunks, q={self.num_chunks})"
+                  if self.num_chunks > 1 else "")
+        return (f"{self.scheme}: waited {self.workers_used}/{self.num_workers} workers"
+                f"{chunks}, "
                 f"compute {self.sim_compute_time:.4f}s + decode {self.decode_wall_time:.4f}s "
                 f"= {self.total_time:.4f}s")
 
 
-def _worker_results(code: CodeInstance, blocks_true: Sequence) -> dict[int, object]:
-    """Exact per-row results from the generator matrix (simulation path).
+# --------------------------- the master event loop ---------------------------
 
-    Cost note: the simulation charges compute time via code.cost_factor; the
-    data itself is produced here once so decode operates on real blocks.
+class _EventSourceDry(Exception):
+    """An event source gave up early (e.g. live queue timeout); the master
+    decides whether the collected chunks decode anyway."""
+
+    def __init__(self, reason: str):
+        super().__init__(reason)
+        self.reason = reason
+
+
+@dataclasses.dataclass
+class _MasterState:
+    """What the shared loop hands back: everything needed to decode."""
+
+    pairs: list[tuple[int, int]]          # (worker, chunk) in arrival order
+    progress: np.ndarray                  # (N,) chunks consumed per worker
+    results_by_row: dict[int, object]     # expanded-M row id -> block payload
+    stop_time: float                      # event time of the decisive arrival
+
+
+def _consume_events(
+    chunked: ChunkedCode,
+    events: Iterator[tuple[float, int, int, dict[int, object]]],
+) -> _MasterState:
+    """THE master loop: drain arrivals until the collected chunks decode.
+
+    Simulation and live threads are just event sources feeding this --
+    there is one protocol, not two.  Each event is
+    ``(time, worker, chunk, payload)`` with ``payload`` mapping expanded-M
+    row ids to blocks; chunks of one worker must arrive in order (ordered
+    sub-task streams).  Per event the rank tracker folds in the new rows;
+    the exact (scheme-specific) decodability test runs only once the
+    tracker reports full rank -- and again per event after that for
+    peel-decoded schemes, whose decodability is stricter than rank.
     """
-    M = code.M
-    out = {}
-    for r in range(M.shape[0]):
-        lo, hi = M.indptr[r], M.indptr[r + 1]
-        acc = None
-        for c, w in zip(M.indices[lo:hi], M.data[lo:hi]):
-            term = blocks_true[c] * w
-            acc = term if acc is None else acc + term
-        if acc is None:
-            first = blocks_true[0]
-            acc = (sp.csr_matrix(first.shape) if sp.issparse(first)
-                   else np.zeros_like(first))
-        out[r] = acc
-    return out
+    tracker = IncrementalRankTracker(chunked.mn)
+    progress = np.zeros(chunked.num_workers, dtype=np.int64)
+    results_by_row: dict[int, object] = {}
+    pairs: list[tuple[int, int]] = []
+    last_time = 0.0
+    why = (f"{chunked.name}: not decodable even with all "
+           f"{chunked.num_workers} workers' chunks")
+    try:
+        for t, w, c, payload in events:
+            if c != progress[w]:
+                raise ValueError(
+                    f"worker {w} delivered chunk {c} out of order "
+                    f"(expected {progress[w]}): sub-task streams are ordered")
+            progress[w] += 1
+            pairs.append((w, c))
+            last_time = t
+            for r, blk in payload.items():
+                results_by_row[r] = blk
+                tracker.add(np.asarray(chunked.M[r].todense()))
+            if tracker.is_full and chunked.can_decode(pairs):
+                return _MasterState(pairs=pairs, progress=progress,
+                                    results_by_row=results_by_row, stop_time=t)
+    except _EventSourceDry as dry:
+        never = np.flatnonzero(progress == 0).tolist()
+        stalled = np.flatnonzero(
+            (progress > 0) & (progress < chunked.num_chunks)).tolist()
+        why = (f"{chunked.name}: {dry.reason}; workers {never} never "
+               f"reported" + (f", workers {stalled} stalled mid-stream"
+                              if stalled else ""))
+    # events exhausted (or the source dried up): the tracker is a float
+    # gate, so give the exact test the last word before declaring failure
+    if chunked.can_decode(pairs):
+        return _MasterState(pairs=pairs, progress=progress,
+                            results_by_row=results_by_row, stop_time=last_time)
+    raise DecodingError(why)
 
+
+# ------------------------------ event sources -------------------------------
+
+def _chunk_result(chunked: ChunkedCode, row: int, blocks_true: Sequence):
+    """Exact payload of one expanded-M row (simulation path), computed
+    lazily at arrival time so simulation cost tracks events consumed."""
+    M = chunked.M
+    lo, hi = M.indptr[row], M.indptr[row + 1]
+    acc = None
+    for c, w in zip(M.indices[lo:hi], M.data[lo:hi]):
+        term = blocks_true[c] * w
+        acc = term if acc is None else acc + term
+    if acc is None:  # empty chunk row (filtered upstream, but stay safe)
+        first = blocks_true[0]
+        acc = (sp.csr_matrix(first.shape) if sp.issparse(first)
+               else np.zeros_like(first))
+    return acc
+
+
+def _sim_events(
+    chunked: ChunkedCode,
+    blocks_true: Sequence,
+    times: np.ndarray,
+) -> Iterator[tuple[float, int, int, dict[int, object]]]:
+    """Arrivals in simulated-time order; payloads materialize on consume.
+
+    ``times``: (N, q) chunk completion times (rows nondecreasing).  The
+    stable flat argsort keeps each worker's chunks in order under ties.
+    """
+    q = chunked.num_chunks
+    order = np.argsort(times, axis=None, kind="stable")
+    for flat in order:
+        w, c = divmod(int(flat), q)
+        payload = {r: _chunk_result(chunked, r, blocks_true)
+                   for r in chunked.expanded_rows(w, c)}
+        yield float(times[w, c]), w, c, payload
+
+
+def _live_events(
+    q_: "queue.Queue",
+    num_workers: int,
+    num_chunks: int,
+    timeout: float,
+    t0: float,
+) -> Iterator[tuple[float, int, int, dict[int, object]]]:
+    """Arrivals drained from the worker threads' queue (wall-clock times).
+
+    A dry queue past ``timeout`` means some worker hung: signal the master
+    loop (which names the silent/stalled workers in a ``DecodingError``
+    after the exact decodability test gets the last word) instead of
+    leaking ``queue.Empty`` to the caller.
+    """
+    for _ in range(num_workers * num_chunks):
+        try:
+            w, c, payload = q_.get(timeout=timeout)
+        except queue.Empty:
+            raise _EventSourceDry(
+                f"no worker result within {timeout:.1f}s and the collected "
+                "chunks do not decode (hung or dead workers?)") from None
+        yield time.perf_counter() - t0, w, c, payload
+
+
+# ------------------------------- entry points -------------------------------
 
 def run_coded_job(
     code: CodeInstance,
@@ -87,47 +218,117 @@ def run_coded_job(
     unit_block_time: float = 1.0,
     check_every: int = 1,
     keep_blocks: bool = False,
+    num_chunks: int = 1,
 ) -> ExecutionReport:
-    """Event-driven simulation of one job under a straggler realization."""
+    """Event-driven simulation of one job under a straggler realization.
+
+    ``num_chunks`` > 1 runs the chunk-granular protocol: each worker's task
+    splits into that many ordered sub-tasks and the master decodes from the
+    first decodable chunk prefix -- at equal total work, never later than
+    the atomic run (the atomic arrival set is a subset of the chunked one).
+    ``check_every`` is retained for API compatibility; the incremental rank
+    tracker already makes the per-event check cheap, so it is ignored.
+    """
+    del check_every  # superseded by the incremental rank tracker
     from repro.runtime.straggler import StragglerModel  # noqa: F401 (doc type)
 
     rng = rng or np.random.default_rng(0)
-    nominal = code.cost_factor * unit_block_time
-    times = straggler.completion_times(nominal, rng)
-    order = np.argsort(times)
+    chunked = code.chunked(num_chunks)
+    work = chunked.chunk_work() * unit_block_time
+    times = straggler.chunk_completion_times(work, rng)
 
-    results_by_row = _worker_results(code, blocks_true)
-
-    finished: list[int] = []
-    decodable_at = None
-    for rank_pos, w in enumerate(order):
-        finished.append(int(w))
-        if len(code.rows_of(finished)) < code.mn:
-            continue
-        if (rank_pos % check_every) == 0 or rank_pos == len(order) - 1:
-            if code.can_decode(finished):
-                decodable_at = times[w]
-                break
-    if decodable_at is None:
-        # final full check (check_every may have skipped the last arrival)
-        if code.can_decode(finished):
-            decodable_at = times[order[-1]]
-        else:
-            raise DecodingError(f"{code.name}: not decodable even with all workers")
+    state = _consume_events(chunked, _sim_events(chunked, blocks_true, times))
 
     t0 = time.perf_counter()
-    blocks = code.decode(finished, results_by_row)
+    blocks = chunked.decode(state.pairs, state.results_by_row)
     decode_time = time.perf_counter() - t0
 
     return ExecutionReport(
-        scheme=code.name,
-        workers_used=len(finished),
+        scheme=chunked.name,
+        workers_used=int((state.progress > 0).sum()),
         num_workers=code.num_workers,
-        sim_compute_time=float(decodable_at),
+        sim_compute_time=float(state.stop_time),
         decode_wall_time=decode_time,
-        total_time=float(decodable_at) + decode_time,
+        total_time=float(state.stop_time) + decode_time,
         decode_stats={},
         blocks=blocks if keep_blocks else None,
+        num_chunks=num_chunks,
+        chunks_used=len(state.pairs),
+    )
+
+
+def run_live_job(
+    code: CodeInstance,
+    A_blocks: Sequence,
+    B_blocks: Sequence,
+    n: int,
+    straggler_sleep: dict[int, float] | None = None,
+    num_threads: int = 4,
+    num_chunks: int = 1,
+    timeout: float = 60.0,
+) -> ExecutionReport:
+    """Concurrent execution with real block products and injected sleeps.
+
+    Each worker computes its coded combination chunk by chunk (real sparse
+    matmuls; an injected sleep is spread evenly across the chunks) and
+    pushes ``(worker, chunk, payload)`` to the master's queue; the master
+    consumes through the shared event loop and stops at the first decodable
+    chunk prefix -- a straggler's finished chunks count, its unfinished
+    ones genuinely never get waited on.
+    """
+    del num_threads  # one thread per worker, as the protocol prescribes
+    straggler_sleep = straggler_sleep or {}
+    chunked = code.chunked(num_chunks)
+    q_: queue.Queue = queue.Queue()
+    stop = threading.Event()
+
+    tasks_by_row = {t.worker: t for t in make_tasks(code.M)}  # row id -> task
+
+    def worker_fn(w: int):
+        delay = straggler_sleep.get(w, 0.0) / num_chunks
+        row_chunks = {r: tasks_by_row[r].chunks(num_chunks)
+                      for r in code.worker_rows[w]}
+        for c in range(num_chunks):
+            if delay:
+                time.sleep(delay)
+            if stop.is_set():
+                return
+            payload = {}
+            for r, chunks in row_chunks.items():
+                out = encode_blocks(chunks[c], A_blocks, B_blocks, n)
+                if out is not None:
+                    payload[r * num_chunks + c] = out
+            q_.put((w, c, payload))
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=worker_fn, args=(w,), daemon=True)
+               for w in range(code.num_workers)]
+    for t in threads:
+        t.start()
+
+    try:
+        state = _consume_events(
+            chunked, _live_events(q_, code.num_workers, num_chunks,
+                                  timeout, t0))
+    finally:
+        stop.set()
+    compute_time = time.perf_counter() - t0
+
+    t1 = time.perf_counter()
+    blocks = chunked.decode(state.pairs, state.results_by_row)
+    decode_time = time.perf_counter() - t1
+
+    return ExecutionReport(
+        scheme=chunked.name,
+        workers_used=int((state.progress > 0).sum()),
+        num_workers=code.num_workers,
+        sim_compute_time=compute_time,
+        decode_wall_time=decode_time,
+        total_time=compute_time + decode_time,
+        decode_stats={},
+        blocks=blocks,
+        num_chunks=num_chunks,
+        chunks_used=len(state.pairs),
     )
 
 
@@ -149,9 +350,11 @@ def run_device_job(
     ``repro.core.coded_matmul.CodedMatmulPlan``; ``mesh`` defaults to a 1-D
     mesh over every visible device (its axis size must equal
     ``plan.num_workers``).  All execution policy lives in
-    ``repro.coded.CodedOp`` now: backend dispatch, BlockELL packing, the
-    runtime pack cache (hit when a caller-supplied ``a_sparse`` recurs),
-    and survivor rebinding.  This wrapper only builds the op, times its
+    ``repro.coded.CodedOp``: backend dispatch, BlockELL packing, the runtime
+    pack cache (hit when a caller-supplied ``a_sparse`` recurs), and
+    survivor rebinding -- ``survivors`` may be an (N,) liveness mask or an
+    (N, q) per-chunk completion mask (partial stragglers contribute their
+    finished prefix rows).  This wrapper only builds the op, times its
     jitted apply, and wraps the result in an ``ExecutionReport``.  The
     decode is folded into the device program (one collective), so
     decode_wall_time is reported as 0 and the whole staged computation is
@@ -208,74 +411,4 @@ def run_device_job(
         decode_stats={"backend": backend, "max_degree": plan.max_degree,
                       "on_device_decode": True, "out_sharded": out_sharded},
         blocks=[np.asarray(result)],
-    )
-
-
-def run_live_job(
-    code: CodeInstance,
-    A_blocks: Sequence,
-    B_blocks: Sequence,
-    n: int,
-    straggler_sleep: dict[int, float] | None = None,
-    num_threads: int = 4,
-) -> ExecutionReport:
-    """Concurrent execution with real block products and injected sleeps.
-
-    Each worker computes its coded combination (real sparse matmuls) and
-    pushes (worker, result) to the master's queue; slow workers sleep first.
-    The master drains the queue and stops at the first decodable prefix --
-    stragglers' results genuinely never get waited on.
-    """
-    straggler_sleep = straggler_sleep or {}
-    q: queue.Queue = queue.Queue()
-    stop = threading.Event()
-
-    tasks = list(range(len(code.worker_rows)))
-
-    def worker_fn(w: int):
-        delay = straggler_sleep.get(w, 0.0)
-        if delay:
-            time.sleep(delay)
-        if stop.is_set():
-            return
-        out = {}
-        for r in code.worker_rows[w]:
-            lo, hi = code.M.indptr[r], code.M.indptr[r + 1]
-            task = CodedTask(worker=w, cols=code.M.indices[lo:hi],
-                             weights=code.M.data[lo:hi])
-            out[r] = encode_blocks(task, A_blocks, B_blocks, n)
-        q.put((w, out))
-
-    t0 = time.perf_counter()
-    threads = [threading.Thread(target=worker_fn, args=(w,), daemon=True)
-               for w in tasks]
-    for t in threads:
-        t.start()
-
-    finished: list[int] = []
-    results_by_row: dict[int, object] = {}
-    while True:
-        w, out = q.get(timeout=60.0)
-        finished.append(w)
-        results_by_row.update(out)
-        if len(code.rows_of(finished)) >= code.mn and code.can_decode(finished):
-            break
-        if len(finished) == code.num_workers:
-            raise DecodingError(f"{code.name}: exhausted workers, not decodable")
-    compute_time = time.perf_counter() - t0
-    stop.set()
-
-    t1 = time.perf_counter()
-    blocks = code.decode(finished, results_by_row)
-    decode_time = time.perf_counter() - t1
-
-    return ExecutionReport(
-        scheme=code.name,
-        workers_used=len(finished),
-        num_workers=code.num_workers,
-        sim_compute_time=compute_time,
-        decode_wall_time=decode_time,
-        total_time=compute_time + decode_time,
-        decode_stats={},
-        blocks=blocks,
     )

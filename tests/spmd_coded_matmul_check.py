@@ -11,7 +11,10 @@ proving the block_sparse path never materializes a (max_degree * s)-row
 stacked operand (the old B_tall gather); and the API-redesign acceptance
 matrix -- the new ``CodedOp.apply`` must be BIT-identical to the legacy
 ``coded_matmul(...)`` shim for both backends x {all-alive, 1-dead, 2-dead}
-x {replicated, out_sharded} on the 8-device mesh."""
+x {replicated, out_sharded} on the 8-device mesh.  The chunked protocol
+adds a partial-survivor axis: (N, q) per-chunk masks where a device that
+completed only its first chunks contributes those slots to the decode
+(``check_partial_chunk_survivors``), with the same old/new bit-parity."""
 
 import os
 import warnings
@@ -24,7 +27,12 @@ import jax.numpy as jnp
 
 from repro import compat
 from repro.coded import CodedMatmulConfig, from_plan
-from repro.core.coded_matmul import coded_matmul, make_plan, uncoded_matmul_reference
+from repro.core.coded_matmul import (
+    chunk_mask_progress,
+    coded_matmul,
+    make_plan,
+    uncoded_matmul_reference,
+)
 from repro.sparse import dense_to_block_ell
 
 
@@ -98,6 +106,60 @@ def check_no_stacked_intermediate(A, B, plan, mesh, ell, s):
         if getattr(aval, "shape", ()) and aval.shape[0] == stacked
     ]
     assert tripped, "jaxpr walker failed to flag the legacy stacked gather"
+
+
+def _chunk_masks(plan, q=2, want=1):
+    """(N, q) prefix-form per-chunk masks that keep the code decodable,
+    each with at least one PARTIAL worker (0 < progress < q)."""
+    rng = np.random.default_rng(1)
+    N, d = plan.num_workers, plan.m * plan.n
+    masks = []
+    for _ in range(500):
+        progress = np.full(N, q)
+        idx = rng.choice(N, size=2, replace=False)
+        progress[idx] = rng.integers(0, q, size=2)
+        if not ((progress > 0) & (progress < q)).any():
+            continue
+        try:
+            plan.with_chunk_progress(progress, q)
+        except ValueError:
+            continue
+        mask = np.zeros((N, q), dtype=bool)
+        for k, p in enumerate(progress):
+            mask[k, :p] = True
+        masks.append(mask)
+        if len(masks) == want:
+            break
+    assert masks, "no decodable partial chunk mask found for this plan"
+    return masks
+
+
+def check_partial_chunk_survivors(A, B, plan, mesh, ell, C_ref):
+    """The chunked-protocol acceptance axis: a device that completed only
+    its first chunks contributes those slots to the decode (per-chunk
+    survivor mask), on every backend x decode layout, bit-identical
+    between the op API and the legacy shim."""
+    for mask in _chunk_masks(plan, q=2):
+        progress = chunk_mask_progress(mask, plan.num_workers)
+        tag = f"progress={progress.tolist()}"
+        for backend in ("dense_scan", "block_sparse"):
+            kw = {"a_sparse": ell} if backend == "block_sparse" else {}
+            for out_sharded in (False, True):
+                op = _op(plan, mesh, backend, out_sharded).with_survivors(mask)
+                C = op.apply(A, B, **kw)
+                np.testing.assert_allclose(
+                    np.asarray(C), np.asarray(C_ref), atol=5e-2, rtol=1e-3,
+                    err_msg=f"partial-chunk decode ({backend}, {tag})")
+                with warnings.catch_warnings():
+                    warnings.simplefilter("ignore", DeprecationWarning)
+                    C_old = coded_matmul(
+                        A, B, plan, mesh, survivors=mask, backend=backend,
+                        out_sharded=out_sharded, **kw)
+                assert np.array_equal(np.asarray(C), np.asarray(C_old)), (
+                    f"per-chunk mask: new API != legacy ({backend}, {tag}, "
+                    f"out_sharded={out_sharded})")
+                print(f"  partial-chunk survivors ok ({backend}, {tag}, "
+                      f"out_sharded={out_sharded})")
 
 
 def check_scatter_decode(A, B, plan, mesh, ell, C_ref):
@@ -180,6 +242,7 @@ def main():
         print(f"  no stacked (max_degree*s) intermediate (m={m} n={n})")
         check_scatter_decode(A, B, plan, mesh, ell, C_ref)
         check_old_new_parity(A, B, plan, mesh, ell)
+        check_partial_chunk_survivors(A, B, plan, mesh, ell, C_ref)
 
         # fault tolerance: kill one worker, rebind, decode from survivors --
         # on both backends (the decode re-derivation is backend-independent,

@@ -1,0 +1,316 @@
+"""Chunk-granular protocol: decode parity, incremental rank tracker, and the
+partial-straggler runtime (ISSUE 4 tentpole layers).
+
+Parity is checked at two strengths, deliberately:
+
+* **bit-identical** where every decode op is exact -- integer blocks with
+  unit (+-1) weights through peel-only schedules multiply/divide by +-1 and
+  add integers, so full-task and chunked decode must agree to the last bit;
+* **allclose** across the WHOLE scheme registry (including float-weighted
+  dense codes, whose pinv decodes legitimately differ in ulps between the
+  atomic and the chunk-expanded system).
+"""
+
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.coded import get_scheme, scheme_names
+from repro.core import chunk_expand, chunk_slices, IncrementalRankTracker
+from repro.core.encoder import CodedTask, SparseCodeSpec, generate_coefficient_matrix
+from repro.core.schemes import ChunkedCode
+from repro.runtime import (
+    LogNormalRates,
+    SlowWorkerRates,
+    SlowWorkers,
+    run_coded_job,
+)
+
+
+def _int_blocks(rng, d, shape=(4, 5)):
+    """Integer-valued blocks: all decode arithmetic stays exact in f64."""
+    return [rng.integers(-9, 10, size=shape).astype(np.float64)
+            for _ in range(d)]
+
+
+def _chunk_results(chunked: ChunkedCode, blocks):
+    """Exact per-expanded-row results straight from the expanded M."""
+    M = chunked.M
+    out = {}
+    for r in range(M.shape[0]):
+        lo, hi = M.indptr[r], M.indptr[r + 1]
+        if hi == lo:
+            continue
+        acc = None
+        for c, w in zip(M.indices[lo:hi], M.data[lo:hi]):
+            term = blocks[c] * w
+            acc = term if acc is None else acc + term
+        out[r] = acc
+    return out
+
+
+def _random_decodable_prefixes(chunked: ChunkedCode, rng, tries=200):
+    """A random prefix-closed decodable chunk subset, as arrival pairs."""
+    N, q = chunked.num_workers, chunked.num_chunks
+    for _ in range(tries):
+        progress = rng.integers(0, q + 1, size=N)
+        pairs = [(w, c) for w in range(N) for c in range(int(progress[w]))]
+        if chunked.can_decode(pairs):
+            return pairs
+    # fall back to everything (always decodable for a full-rank code)
+    return [(w, c) for w in range(N) for c in range(q)]
+
+
+# ------------------------------ chunk plumbing ------------------------------
+
+def test_chunk_slices_partition():
+    for length in (0, 1, 5, 7, 12):
+        for q in (1, 2, 3, 5, 9):
+            sls = chunk_slices(length, q)
+            assert len(sls) == q
+            flat = [i for sl in sls for i in range(sl.start, sl.stop)]
+            assert flat == list(range(length))
+            sizes = [sl.stop - sl.start for sl in sls]
+            assert max(sizes) - min(sizes) <= 1
+
+
+def test_coded_task_chunks_cover_task():
+    rng = np.random.default_rng(0)
+    task = CodedTask(worker=3, cols=np.arange(7), weights=rng.random(7))
+    chunks = task.chunks(3)
+    assert [c.chunk for c in chunks] == [0, 1, 2]
+    np.testing.assert_array_equal(
+        np.concatenate([c.cols for c in chunks]), task.cols)
+    np.testing.assert_array_equal(
+        np.concatenate([c.weights for c in chunks]), task.weights)
+
+
+@pytest.mark.parametrize("q", [1, 2, 4])
+def test_chunk_expand_rows_sum_to_original(q):
+    spec = SparseCodeSpec(m=3, n=3, num_workers=20, seed=2)
+    M = generate_coefficient_matrix(spec)
+    Mq = chunk_expand(M, q)
+    assert Mq.shape == (M.shape[0] * q, M.shape[1])
+    # summing each row's chunk rows reproduces the row exactly
+    S = sp.kron(sp.identity(M.shape[0]), np.ones((1, q)))
+    np.testing.assert_array_equal((S @ Mq).toarray(), M.toarray())
+
+
+# ------------------------------ decode parity -------------------------------
+
+@pytest.mark.parametrize("scheme", sorted(scheme_names()))
+@pytest.mark.parametrize("q", [1, 2, 4])
+def test_chunked_decode_parity_all_schemes(scheme, q):
+    """Any decodable prefix-closed chunk subset decodes to the true blocks,
+    for every registered scheme (chunking passes through the registry)."""
+    m, n = 2, 2
+    sch = get_scheme(scheme)
+    inst = (sch.instance(m, n) if scheme == "uncoded"
+            else sch.instance(m, n, 12, seed=3))
+    chunked = inst.chunked(q)
+    rng = np.random.default_rng(q * 100 + 7)
+    blocks = _int_blocks(rng, m * n)
+    results = _chunk_results(chunked, blocks)
+    pairs = _random_decodable_prefixes(chunked, rng)
+    got = chunked.decode(pairs, results)
+    for g, want in zip(got, blocks):
+        g = g.toarray() if sp.issparse(g) else np.asarray(g)
+        np.testing.assert_allclose(g, want, atol=1e-6,
+                                   err_msg=f"{scheme} q={q}")
+
+
+@pytest.mark.parametrize("q", [1, 2, 4])
+def test_chunked_decode_bit_identical_exact_arithmetic(q):
+    """Property: with integer blocks and unit weights (peel-only exact ops),
+    chunked decode at FULL progress is bit-identical to the atomic decode --
+    and any random decodable prefix subset recovers the exact same bits."""
+    m, n, N = 2, 3, 24
+    inst = get_scheme("lt_code").instance(m, n, N, seed=5)
+    chunked = inst.chunked(q)
+    rng = np.random.default_rng(11)
+    blocks = _int_blocks(rng, m * n)
+    results = _chunk_results(chunked, blocks)
+
+    full_pairs = [(w, c) for w in range(N) for c in range(q)]
+    atomic = inst.decode(list(range(N)),
+                         {r: _chunk_results(inst.chunked(1), blocks)[r]
+                          for r in range(N)})
+    for pairs in (full_pairs, _random_decodable_prefixes(chunked, rng)):
+        if not chunked.can_decode(pairs):
+            continue  # lt peeling can stall on a random subset
+        got = chunked.decode(pairs, results)
+        for g, a, want in zip(got, atomic, blocks):
+            np.testing.assert_array_equal(np.asarray(g), want)
+            np.testing.assert_array_equal(np.asarray(a), want)
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(a))
+
+
+@pytest.mark.parametrize("q", [2, 4])
+def test_chunk_work_preserves_totals(q):
+    """Equal total work: per-worker chunk work sums to the atomic cost."""
+    for scheme in sorted(scheme_names()):
+        sch = get_scheme(scheme)
+        inst = (sch.instance(2, 2) if scheme == "uncoded"
+                else sch.instance(2, 2, 10, seed=1))
+        work = inst.chunked(q).chunk_work()
+        assert work.shape == (inst.num_workers, q)
+        np.testing.assert_allclose(work.sum(axis=1), inst.cost_factor,
+                                   err_msg=scheme)
+        assert (work >= 0).all()
+
+
+# -------------------------- incremental rank tracker ------------------------
+
+@pytest.mark.parametrize("d,K,seed", [(4, 10, 0), (9, 30, 1), (16, 50, 2)])
+def test_incremental_rank_matches_oracle(d, K, seed):
+    """Tracker rank == np.linalg.matrix_rank of the arrival prefix, at every
+    arrival, across randomized arrival orders and dependent-row mixes."""
+    rng = np.random.default_rng(seed)
+    base = rng.integers(-3, 4, size=(K // 2, d)).astype(float)
+    # mix in exact dependents: duplicates, scalings, sums, and zero rows
+    dep = [base[rng.integers(len(base))] * rng.integers(-2, 3)
+           for _ in range(K - len(base) - 2)]
+    rows = np.vstack([base, np.zeros((2, d)), np.asarray(dep)])
+    for trial in range(4):
+        order = rng.permutation(len(rows))
+        tracker = IncrementalRankTracker(d)
+        for i, idx in enumerate(order):
+            tracker.add(rows[idx])
+            want = int(np.linalg.matrix_rank(rows[order[:i + 1]]))
+            assert tracker.rank == want, (
+                f"arrival {i}: tracker {tracker.rank} != oracle {want}")
+        assert tracker.is_full == (np.linalg.matrix_rank(rows) >= d)
+
+
+def test_incremental_rank_accepts_sparse_rows():
+    M = sp.csr_matrix(np.array([[1.0, 0, 0], [0, 2.0, 0], [1.0, 2.0, 0],
+                                [0, 0, 3.0]]))
+    tracker = IncrementalRankTracker(3)
+    assert tracker.add(M[0])
+    assert tracker.add(M[1])
+    assert not tracker.add(M[2])   # dependent
+    assert tracker.add(M[3])
+    assert tracker.is_full
+
+
+# ------------------------------ runtime behavior ----------------------------
+
+def test_chunked_sim_beats_atomic_under_slow_workers():
+    """Acceptance: equal total work, SlowWorkers -- chunked completion time
+    strictly below atomic (partial stragglers contribute their prefixes)."""
+    from repro.core import schemes
+
+    code = schemes.sparse_code(4, 4, 24, seed=1)
+    rng0 = np.random.default_rng(0)
+    blocks = _int_blocks(rng0, 16)
+    strag = SlowWorkers(num_slow=6, slowdown=10.0)
+    means = {}
+    for q in (1, 2, 4):
+        reps = [run_coded_job(code, blocks, strag,
+                              rng=np.random.default_rng(100 + t),
+                              unit_block_time=0.05, num_chunks=q)
+                for t in range(5)]
+        means[q] = float(np.mean([r.sim_compute_time for r in reps]))
+    assert means[2] < means[1], means
+    assert means[4] < means[1], means
+
+
+@pytest.mark.parametrize("model", [SlowWorkerRates(num_slow=3, slowdown=8.0),
+                                   LogNormalRates(sigma=0.7)])
+def test_rate_models_chunk_times(model):
+    """Rate models: cumulative chunk times, consistent with the legacy API."""
+    rng = np.random.default_rng(4)
+    work = np.abs(rng.random((12, 4))) + 0.01
+    times = model.chunk_completion_times(work, np.random.default_rng(9))
+    assert times.shape == work.shape
+    assert (np.diff(times, axis=1) >= 0).all(), "chunk times must be ordered"
+    # same rng seed => same rates => the last chunk lands at the legacy
+    # completion_times of the total work
+    legacy = model.completion_times(work.sum(axis=1), np.random.default_rng(9))
+    np.testing.assert_allclose(times[:, -1], legacy)
+
+
+def test_time_model_adapter_spreads_linearly():
+    """Legacy completion-time models adapt to chunks by linear spreading."""
+    work = np.array([[1.0, 1.0, 2.0], [2.0, 1.0, 1.0]])
+    times = SlowWorkers(num_slow=0).chunk_completion_times(
+        work, np.random.default_rng(0))
+    np.testing.assert_allclose(times, [[0.25, 0.5, 1.0], [0.5, 0.75, 1.0]] *
+                               work.sum(axis=1, keepdims=True))
+
+
+def test_chunked_sim_decodes_exactly():
+    from repro.core import schemes
+
+    code = schemes.sparse_code(3, 2, 18, seed=6)
+    rng = np.random.default_rng(2)
+    blocks = _int_blocks(rng, 6)
+    rep = run_coded_job(code, blocks, LogNormalRates(0.6),
+                        rng=np.random.default_rng(8), num_chunks=3,
+                        keep_blocks=True)
+    assert rep.num_chunks == 3
+    assert rep.chunks_used >= rep.workers_used
+    for got, want in zip(rep.blocks, blocks):
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+
+# ------------------------- device-path chunk masks --------------------------
+
+def test_plan_with_chunk_progress_masks_prefix():
+    from repro.core.coded_matmul import chunk_mask_progress, make_plan
+
+    plan = make_plan(2, 2, num_workers=8, seed=5)
+    q = 2
+    progress = np.full(8, q)
+    progress[3] = 1
+    p2 = plan.with_chunk_progress(progress, q)
+    # boundaries follow the worker's ACTUAL degree (host rule), not the
+    # padded table width -- host-observed progress drives the device rebind
+    deg3 = int(np.count_nonzero(plan.weights[3]))
+    kept = chunk_slices(deg3, q)[0]
+    np.testing.assert_array_equal(p2.weights[3, kept.stop:], 0.0)
+    np.testing.assert_array_equal(p2.weights[3, :kept.stop],
+                                  plan.weights[3, :kept.stop])
+    assert 0 < kept.stop < deg3 or deg3 == 1
+    # other workers untouched; decode re-derived for the masked system
+    np.testing.assert_array_equal(p2.weights[:3], plan.weights[:3])
+    M_eff = p2.coefficient_matrix()
+    np.testing.assert_allclose(p2.decode @ M_eff, np.eye(4), atol=1e-4)
+
+    # mask round-trip helper: prefix form ok, holes rejected
+    mask = np.ones((8, q), dtype=bool)
+    mask[3, 1] = False
+    np.testing.assert_array_equal(chunk_mask_progress(mask, 8), progress)
+    bad = mask.copy()
+    bad[5] = [False, True]
+    with pytest.raises(ValueError, match="prefix"):
+        chunk_mask_progress(bad, 8)
+
+
+def test_block_sparse_refuses_pack_without_slot_of():
+    """A pack lacking the tile->slot map cannot follow chunk-masked weights;
+    the factory must refuse it instead of silently using base weights."""
+    import dataclasses
+
+    from repro.core.coded_matmul import (
+        _make_block_sparse_local_product, make_plan, pack_worker_tiles)
+    from repro.sparse import dense_to_block_ell
+
+    plan = make_plan(2, 2, num_workers=8, seed=0)
+    rng = np.random.default_rng(0)
+    ell = dense_to_block_ell(
+        rng.standard_normal((32, 32)).astype(np.float32), block_size=8)
+    pack = pack_worker_tiles(ell, plan)
+    legacy = dataclasses.replace(pack, slot_of=None)
+    with pytest.raises(ValueError, match="slot_of"):
+        _make_block_sparse_local_product(plan, legacy, bt=8)
+    assert _make_block_sparse_local_product(plan, pack, bt=8) is not None
+
+
+def test_plan_chunk_progress_rank_loss_raises():
+    from repro.core.decoder import DecodingError
+    from repro.core.coded_matmul import make_plan
+
+    plan = make_plan(2, 2, num_workers=8, seed=5)
+    with pytest.raises(DecodingError):
+        plan.with_chunk_progress(np.zeros(8, dtype=int), 2)

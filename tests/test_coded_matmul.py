@@ -63,8 +63,10 @@ def test_coded_matmul_spmd_8dev_subprocess():
 
     script = pathlib.Path(__file__).parent / "spmd_coded_matmul_check.py"
     env = dict(os.environ, PYTHONPATH=str(pathlib.Path(__file__).parents[1] / "src"))
+    # the check grew the partial-chunk survivor axis (extra shard_map
+    # compilations per plan), so give it headroom beyond the historical 600
     out = subprocess.run([sys.executable, str(script)], env=env,
-                         capture_output=True, text=True, timeout=600)
+                         capture_output=True, text=True, timeout=900)
     assert out.returncode == 0, out.stdout + out.stderr
     assert "ALL-OK" in out.stdout
 

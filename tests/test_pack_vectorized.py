@@ -59,22 +59,24 @@ def _pack_worker_tiles_ref(ell, plan):
                 g = i * CBl + cb
                 for e in range(int(ell.nnzb[g])):
                     per[k][cb].append((int(ell.idx[g, e]), j,
-                                       float(plan.weights[k, l]),
+                                       float(plan.weights[k, l]), l,
                                        ell.vals[g, e]))
     Lw = max(1, max((len(per[k][cb]) for k in range(N) for cb in range(CBl)),
                     default=1))
     vals = np.zeros((N, CBl, Lw, bs, bs), np.float32)
     src = np.zeros((N, CBl, Lw, 2), np.int32)
     wslot = np.zeros((N, CBl, Lw), np.float32)
+    slot_of = np.zeros((N, CBl, Lw), np.int32)
     live = np.zeros((N,), np.int64)
     for k in range(N):
         for cb in range(CBl):
-            for slot, (rb, j, w, tile) in enumerate(per[k][cb]):
+            for slot, (rb, j, w, l, tile) in enumerate(per[k][cb]):
                 vals[k, cb, slot] = tile
                 src[k, cb, slot] = (rb, j)
                 wslot[k, cb, slot] = w
+                slot_of[k, cb, slot] = l
             live[k] += len(per[k][cb])
-    return vals, src, wslot, live
+    return vals, src, wslot, slot_of, live
 
 
 # --------------------------------- tests -----------------------------------
@@ -115,12 +117,18 @@ def test_pack_worker_tiles_matches_reference(m, n, workers, s, bs, density):
     A = rng.standard_normal((s, r)) * np.kron(mask, np.ones((bs, bs)))
     ell = dense_to_block_ell(A.astype(np.float32), block_size=bs)
     got = pack_worker_tiles(ell, plan)
-    vals, src, wslot, live = _pack_worker_tiles_ref(ell, plan)
+    vals, src, wslot, slot_of, live = _pack_worker_tiles_ref(ell, plan)
     np.testing.assert_array_equal(got.vals, vals)
     np.testing.assert_array_equal(got.src, src)
     np.testing.assert_array_equal(got.wslot, wslot)
+    np.testing.assert_array_equal(got.slot_of, slot_of)
     np.testing.assert_array_equal(got.live_tiles, live)
     assert got.block_size == bs
+    # slot_of round-trips the pack's weights through the plan's task table
+    # (the gather the chunk-masked local product performs on device)
+    regather = plan.weights[np.arange(plan.cols.shape[0])[:, None, None],
+                            got.slot_of] * (got.wslot != 0.0)
+    np.testing.assert_array_equal(regather.astype(np.float32), got.wslot)
 
 
 def test_pack_cache_identity_keyed_lru():

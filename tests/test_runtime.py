@@ -87,6 +87,52 @@ def test_all_schemes_complete_under_stragglers():
                                        err_msg=f"scheme {name}")
 
 
+def test_live_job_chunked_harvests_partial_straggler():
+    """q=3 live run: the straggler's finished chunks are usable equations
+    and the decoded product is still exact."""
+    m = n = 2
+    A = sp.random(40, 16, density=0.3, format="csc",
+                  random_state=np.random.RandomState(0))
+    B = sp.random(40, 20, density=0.3, format="csc",
+                  random_state=np.random.RandomState(1))
+    code = schemes.sparse_code(m, n, N=10, seed=4)
+    rep = run_live_job(code, split_blocks(A, m), split_blocks(B, n), n,
+                       straggler_sleep={0: 30.0}, num_chunks=3)
+    assert rep.total_time < 10.0
+    assert rep.num_chunks == 3 and rep.chunks_used > 0
+    C = (A.T @ B).toarray()
+    br, bt = C.shape[0] // m, C.shape[1] // n
+    for i in range(m):
+        for j in range(n):
+            got = rep.blocks[i * n + j]
+            got = got.toarray() if sp.issparse(got) else np.asarray(got)
+            np.testing.assert_allclose(got, C[i*br:(i+1)*br, j*bt:(j+1)*bt], atol=1e-8)
+
+
+def test_live_job_hung_worker_raises_decoding_error():
+    """A worker that never reports surfaces as DecodingError naming it,
+    not a bare queue.Empty."""
+    import queue
+
+    from repro.core.decoder import DecodingError
+
+    m = n = 2
+    rng = np.random.default_rng(7)
+    A = sp.random(16, 8, density=0.5, format="csc",
+                  random_state=np.random.RandomState(2))
+    B = sp.random(16, 8, density=0.5, format="csc",
+                  random_state=np.random.RandomState(3))
+    code = schemes.uncoded(m, n)  # needs ALL workers: a hang cannot decode
+    try:
+        run_live_job(code, split_blocks(A, m), split_blocks(B, n), n,
+                     straggler_sleep={2: 30.0}, timeout=0.5)
+        raise AssertionError("expected DecodingError for the hung worker")
+    except DecodingError as e:
+        assert "2" in str(e) and "never reported" in str(e)
+    except queue.Empty:  # pragma: no cover
+        raise AssertionError("queue.Empty leaked to the caller")
+
+
 def test_run_device_job_single_device_both_backends():
     """The SPMD bridge: run_device_job stages coded_matmul on the default
     (single-device) mesh and returns the decoded product for each backend."""
