@@ -1,0 +1,20 @@
+"""Static invariant checking for the coded-matmul stack.
+
+Three layers, one report, one CLI (``python -m repro.analysis``):
+
+* ``repro.analysis.schemes``     -- generator-matrix math: recovery
+  thresholds vs the paper's bounds, degree/weight sanity, chunk-expand
+  exactness, decode conditioning, tile-pack consistency;
+* ``repro.analysis.jaxpr_check`` -- staged-jaxpr verification: no dense
+  materialization, collective axis names, dtype policy, per-equation
+  memory accounting;
+* ``repro.analysis.lint``        -- AST repo contracts: compat boundary,
+  jax-free modules, hot-path rank calls, deprecated surfaces.
+
+This package root is import-time jax-free (the jaxpr layer lazy-imports
+jax) so the CLI can configure XLA_FLAGS before anything touches XLA.
+"""
+
+from repro.analysis.findings import ERROR, WARNING, Finding, Report
+
+__all__ = ["ERROR", "WARNING", "Finding", "Report"]

@@ -1,0 +1,94 @@
+"""CLI driver: ``python -m repro.analysis [--strict] [--json PATH] [--only L]``.
+
+Runs the three analysis layers (lint -> schemes -> jaxpr, cheapest first),
+aggregates their findings into one ``Report``, prints human-readable
+``file:line`` findings, and exits nonzero on violations:
+
+* exit 1 -- error findings (or, under ``--strict``, any warning);
+* exit 2 -- a requested layer checked zero units (a vacuous pass is a fail).
+
+The jaxpr layer stages every registered scheme through the real CodedOp
+path, which needs an 8-device mesh; the CLI provisions host devices via
+XLA_FLAGS *before* jax is first imported, so run it as its own process
+(exactly how the CI gate invokes it).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+LAYERS = ("lint", "schemes", "jaxpr")
+
+
+def _provision_host_devices(count: int = 8) -> None:
+    """Make the jaxpr layer's mesh possible on a CPU host.
+
+    Must run before the first jax import; if jax is somehow already in,
+    leave the environment alone -- the layer itself degrades to a coverage
+    warning when devices are short.
+    """
+    if "jax" in sys.modules:  # pragma: no cover - defensive
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={count}".strip())
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static invariant checks: code schemes, staged jaxprs, "
+                    "repo contracts")
+    parser.add_argument("--strict", action="store_true",
+                        help="treat warnings as failures (the CI gate)")
+    parser.add_argument("--json", metavar="PATH", default=None,
+                        help="also write the full report as JSON ('-' for "
+                             "stdout)")
+    parser.add_argument("--only", action="append", choices=LAYERS,
+                        default=None, metavar="LAYER",
+                        help="run only this layer (repeatable; default all)")
+    args = parser.parse_args(argv)
+    layers = tuple(args.only) if args.only else LAYERS
+    # before ANY layer: the schemes layer pulls in jax transitively (pack
+    # checks import coded_matmul), and XLA_FLAGS must precede jax init
+    if "jaxpr" in layers:
+        _provision_host_devices()
+
+    from repro.analysis.findings import Report
+
+    report = Report()
+    if "lint" in layers:
+        from repro.analysis.lint import run_lint
+
+        findings, files = run_lint()
+        report.extend(findings)
+        report.checked["lint"] = files
+    if "schemes" in layers:
+        from repro.analysis.schemes import run_scheme_checks
+
+        findings, schemes = run_scheme_checks()
+        report.extend(findings)
+        report.checked["schemes"] = schemes
+    if "jaxpr" in layers:
+        from repro.analysis.jaxpr_check import run_jaxpr_checks
+
+        findings, programs = run_jaxpr_checks()
+        report.extend(findings)
+        report.checked["jaxpr"] = programs
+
+    if args.json == "-":
+        print(report.to_json())
+    else:
+        print(report.render())
+        if args.json:
+            with open(args.json, "w") as fh:
+                fh.write(report.to_json() + "\n")
+    return report.exit_code(strict=args.strict)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,295 @@
+"""AST-based repo contract linter (the third analysis layer).
+
+The contracts checked here exist so that structural properties the rest of
+the system relies on cannot rot silently:
+
+* ``compat-boundary`` -- every version-gated JAX API (``jax.experimental.*``,
+  ``jax.shard_map``, ``jax.make_mesh``, ``jax.sharding.AxisType``,
+  ``jax.lax.psum_scatter``) is accessed only through ``repro/compat.py``
+  (DESIGN.md section 4).  The single exception is ``jax.experimental.pallas``
+  inside ``kernels/`` -- the Pallas namespace is the kernel substrate itself,
+  not a shimmed API, and compat deliberately does not wrap it.
+* ``jax-free-module`` -- modules that declare themselves importable before
+  XLA_FLAGS are set (``core/coded_backends.py``, ``coded/config.py``,
+  ``core/encoder.py``, ``coded/registry.py``) must not import jax at module
+  scope.  Function-local (lazy) imports are fine; that is the sanctioned
+  pattern.
+* ``matrix-rank-hot-path`` -- ``np.linalg.matrix_rank`` is O(rows * mn^2)
+  per call; inside ``runtime/`` and ``coded/`` the per-event decodability
+  contract is ``core.decoder.IncrementalRankTracker``.  Legitimate one-shot
+  uses (plan construction in ``coded/registry.py``) carry an inline waiver.
+* ``no-deprecated-surface`` -- no internal caller of the legacy
+  ``coded_matmul`` shim: ``repro`` code must use ``repro.coded`` (CI runs
+  pytest with DeprecationWarning-as-error, but that only covers executed
+  paths; this rule covers every import site statically).
+
+Waivers: append ``# repro: allow(<rule>)`` to the offending line (or put it
+on its own line directly above).  A waiver that suppresses nothing is itself
+an ``unused-waiver`` error, so stale waivers cannot accumulate.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Callable, Iterator
+
+from repro.analysis.findings import ERROR, Finding
+
+WAIVER_RE = re.compile(r"#\s*repro:\s*allow\(([a-z0-9_-]+)\)")
+
+#: version-gated top-level JAX APIs that must route through repro.compat
+VERSION_GATED_ATTRS = (
+    "jax.shard_map",
+    "jax.make_mesh",
+    "jax.sharding.AxisType",
+    "jax.lax.psum_scatter",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class LintConfig:
+    """Which files each contract applies to (paths relative to the lint
+    root, posix-style).  The defaults describe the real repo layout; tests
+    point the fields at fixture trees instead."""
+
+    compat_module: str = "compat.py"
+    pallas_allowed_dirs: tuple[str, ...] = ("kernels",)
+    jax_free_modules: tuple[str, ...] = (
+        "core/coded_backends.py",
+        "coded/config.py",
+        "core/encoder.py",
+        "coded/registry.py",
+    )
+    hot_path_dirs: tuple[str, ...] = ("runtime", "coded")
+    deprecated_module: str = "core/coded_matmul.py"
+    deprecated_name: str = "coded_matmul"
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """``a.b.c`` attribute chain as a string, or None if it is not one."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _under(rel: str, dirs: tuple[str, ...]) -> bool:
+    return any(rel == d or rel.startswith(d + "/") for d in dirs)
+
+
+# ------------------------------ rule checkers -------------------------------
+# Each checker: (rel_path, tree, config) -> Iterator[(rule, line, message)].
+
+def check_compat_boundary(rel: str, tree: ast.AST,
+                          cfg: LintConfig) -> Iterator[tuple[str, int, str]]:
+    if rel == cfg.compat_module:
+        return
+    pallas_ok = _under(rel, cfg.pallas_allowed_dirs)
+
+    def experimental_violation(modname: str) -> bool:
+        if not modname.startswith("jax.experimental"):
+            return False
+        if pallas_ok and modname.startswith("jax.experimental.pallas"):
+            return False
+        return True
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if experimental_violation(alias.name):
+                    yield ("compat-boundary", node.lineno,
+                           f"import of {alias.name!r}: version-gated JAX "
+                           "APIs live in repro.compat only")
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if mod == "jax.experimental":
+                # `from jax.experimental import pallas` resolves per-name
+                for alias in node.names:
+                    if experimental_violation(f"jax.experimental.{alias.name}"):
+                        yield ("compat-boundary", node.lineno,
+                               f"import of jax.experimental.{alias.name}: "
+                               "version-gated JAX APIs live in repro.compat "
+                               "only")
+            elif experimental_violation(mod):
+                yield ("compat-boundary", node.lineno,
+                       f"import from {mod!r}: version-gated JAX APIs live "
+                       "in repro.compat only")
+        elif isinstance(node, ast.Attribute):
+            name = _dotted(node)
+            if name is None:
+                continue
+            if experimental_violation(name):
+                yield ("compat-boundary", node.lineno,
+                       f"use of {name}: version-gated JAX APIs live in "
+                       "repro.compat only")
+            elif name in VERSION_GATED_ATTRS:
+                yield ("compat-boundary", node.lineno,
+                       f"use of {name}: call the repro.compat wrapper "
+                       "instead (DESIGN.md section 4)")
+
+
+def _module_scope_stmts(tree: ast.Module) -> Iterator[ast.stmt]:
+    """Top-level statements, descending into module-level if/try bodies
+    (those still execute at import time) but not into defs/classes."""
+    stack = list(tree.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.If, ast.Try)):
+            for field in ("body", "orelse", "finalbody", "handlers"):
+                for child in getattr(node, field, []):
+                    stack.append(child.body if isinstance(
+                        child, ast.ExceptHandler) else child)
+        if isinstance(node, ast.ExceptHandler):
+            stack.extend(node.body)
+
+
+def check_jax_free_module(rel: str, tree: ast.AST,
+                          cfg: LintConfig) -> Iterator[tuple[str, int, str]]:
+    if rel not in cfg.jax_free_modules:
+        return
+    for node in _module_scope_stmts(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name.split(".")[0] == "jax":
+                    yield ("jax-free-module", node.lineno,
+                           f"{rel} must stay import-time jax-free "
+                           "(lazy-import jax inside the function instead)")
+        elif isinstance(node, ast.ImportFrom):
+            if (node.module or "").split(".")[0] == "jax":
+                yield ("jax-free-module", node.lineno,
+                       f"{rel} must stay import-time jax-free "
+                       "(lazy-import jax inside the function instead)")
+
+
+def check_matrix_rank_hot_path(rel: str, tree: ast.AST,
+                               cfg: LintConfig) -> Iterator[tuple[str, int, str]]:
+    if not _under(rel, cfg.hot_path_dirs):
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _dotted(node.func) or (
+            node.func.id if isinstance(node.func, ast.Name) else "")
+        if name == "matrix_rank" or name.endswith(".matrix_rank"):
+            yield ("matrix-rank-hot-path", node.lineno,
+                   "matrix_rank call in a hot-path package: the per-event "
+                   "decodability contract is core.decoder."
+                   "IncrementalRankTracker (waive one-shot plan-construction "
+                   "uses with a `repro: allow(matrix-rank-hot-path)` comment)")
+
+
+def check_no_deprecated_surface(rel: str, tree: ast.AST,
+                                cfg: LintConfig) -> Iterator[tuple[str, int, str]]:
+    if rel == cfg.deprecated_module:
+        return
+    shim = cfg.deprecated_name
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if mod.endswith(cfg.deprecated_module[:-3].replace("/", ".")):
+                for alias in node.names:
+                    if alias.name == shim:
+                        yield ("no-deprecated-surface", node.lineno,
+                               f"import of the deprecated {shim!r} shim: "
+                               "internal callers must use repro.coded "
+                               "(CodedMatmulConfig + plan/from_plan -> bind "
+                               "-> apply)")
+        elif isinstance(node, ast.Call):
+            name = _dotted(node.func) or (
+                node.func.id if isinstance(node.func, ast.Name) else "")
+            if name == shim or name.endswith("." + shim):
+                yield ("no-deprecated-surface", node.lineno,
+                       f"call of the deprecated {shim!r} shim: internal "
+                       "callers must use repro.coded")
+
+
+RULES: tuple[Callable, ...] = (
+    check_compat_boundary,
+    check_jax_free_module,
+    check_matrix_rank_hot_path,
+    check_no_deprecated_surface,
+)
+
+RULE_NAMES = ("compat-boundary", "jax-free-module", "matrix-rank-hot-path",
+              "no-deprecated-surface")
+
+
+# -------------------------------- the engine --------------------------------
+
+def _waivers(source: str) -> dict[int, set[str]]:
+    """Physical source line -> rule names waived there."""
+    out: dict[int, set[str]] = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        rules = set(WAIVER_RE.findall(text))
+        if rules:
+            out[i] = rules
+    return out
+
+
+def lint_source(rel: str, source: str,
+                config: LintConfig | None = None) -> list[Finding]:
+    """Run every contract rule over one file's source; apply waivers.
+
+    A finding at line F is waived by ``# repro: allow(<rule>)`` written
+    either trailing on line F or on the line directly above it.
+    """
+    config = config or LintConfig()
+    try:
+        tree = ast.parse(source, filename=rel)
+    except SyntaxError as exc:
+        return [Finding(rule="syntax", severity=ERROR, path=rel,
+                        line=exc.lineno or 0, layer="lint",
+                        message=f"cannot parse: {exc.msg}")]
+    waivers = _waivers(source)
+    used: set[tuple[int, str]] = set()
+    findings = []
+    for checker in RULES:
+        for rule, line, message in checker(rel, tree, config):
+            covering = [ln for ln in (line, line - 1)
+                        if rule in waivers.get(ln, set())]
+            if covering:
+                used.add((covering[0], rule))
+                continue
+            findings.append(Finding(rule=rule, severity=ERROR, path=rel,
+                                    line=line, message=message, layer="lint"))
+    for line, rules in waivers.items():
+        for rule in sorted(rules - {r for ln, r in used if ln == line}):
+            findings.append(Finding(
+                rule="unused-waiver", severity=ERROR, path=rel, line=line,
+                layer="lint",
+                message=f"waiver `repro: allow({rule})` suppresses "
+                        "nothing; delete it"))
+    return findings
+
+
+def iter_source_files(root: Path) -> Iterator[Path]:
+    for path in sorted(root.rglob("*.py")):
+        if "__pycache__" in path.parts:
+            continue
+        yield path
+
+
+def run_lint(root: Path | str | None = None,
+             config: LintConfig | None = None) -> tuple[list[Finding], int]:
+    """Lint every ``.py`` under ``root`` (default: the installed ``repro``
+    package tree).  Returns (findings, files_checked)."""
+    if root is None:
+        import repro
+
+        root = Path(repro.__file__).resolve().parent
+    root = Path(root)
+    findings: list[Finding] = []
+    count = 0
+    for path in iter_source_files(root):
+        rel = path.relative_to(root).as_posix()
+        findings.extend(lint_source(rel, path.read_text(), config))
+        count += 1
+    return findings, count

@@ -52,7 +52,17 @@ class CodedMatmulConfig:
             raise ValueError("axis_name must be a non-empty mesh axis name")
         # normalize any dtype spelling (np.float32, "f4", jnp dtypes) to the
         # canonical name so configs stay hashable and comparable
-        object.__setattr__(self, "out_dtype", np.dtype(self.out_dtype).name)
+        canonical = np.dtype(self.out_dtype).name
+        # the dtype policy (repro.analysis jaxpr layer: no silent float64 on
+        # device) holds by construction: reject EVERY spelling that
+        # normalizes to a 64-bit float/complex, since jax would silently
+        # truncate it to f32 anyway under the default x64-disabled config
+        if canonical in ("float64", "complex128"):
+            raise ValueError(
+                f"out_dtype {self.out_dtype!r} normalizes to {canonical}: "
+                "the device path is f32-accumulated by design (DESIGN.md "
+                "section 9 dtype policy); use float32/bfloat16/float16")
+        object.__setattr__(self, "out_dtype", canonical)
 
     @property
     def np_dtype(self) -> np.dtype:

@@ -40,7 +40,7 @@ from typing import Callable
 import numpy as np
 
 from repro.core import schemes as schemes_lib
-from repro.core.schemes import CodeInstance
+from repro.core.schemes import CodeInstance, SchemeInvariants
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +70,10 @@ class Scheme:
     truncates: bool = False                # degree-distribution designs get
     #   the lockstep default truncation (~2 ln(mn)) in plan(); dense designs
     #   keep every entry of their rows
+    #: static decodability profile ``repro.analysis`` validates against;
+    #: None = the checker's permissive default (custom schemes should
+    #: declare one)
+    invariants: SchemeInvariants | None = None
 
     def instance(self, m: int, n: int, num_workers: int | None = None,
                  *, seed: int = 0, **kwargs) -> CodeInstance:
@@ -143,7 +147,9 @@ class Scheme:
                 cols[k, :take] = M.indices[lo:lo + take]
                 weights[k, :take] = M.data[lo:lo + take]
                 Mt[k, M.indices[lo:lo + take]] = M.data[lo:lo + take]
-            if np.linalg.matrix_rank(Mt) >= d:
+            # one-shot rank check at plan-construction time, not per-event
+            # decode gating -- the hot-path contract does not apply here
+            if np.linalg.matrix_rank(Mt) >= d:  # repro: allow(matrix-rank-hot-path)
                 design = CodeDesign(m=m, n=n, num_workers=N,
                                     scheme=self.name, seed=seed + attempt)
                 return CodedMatmulPlan(
@@ -161,13 +167,21 @@ _REGISTRY: dict[str, Scheme] = {}
 
 
 def register_scheme(name: str, builder: Callable | None = None, *,
-                    fixed_workers: bool = False, truncates: bool = False):
-    """Register a scheme builder under ``name`` (usable as a decorator)."""
+                    fixed_workers: bool = False, truncates: bool = False,
+                    invariants: SchemeInvariants | None = None):
+    """Register a scheme builder under ``name`` (usable as a decorator).
+
+    ``invariants`` is the design's static decodability profile (recovery
+    threshold kind and allowed overhead); ``repro.analysis`` validates every
+    registered scheme against it, falling back to a permissive default when
+    omitted.  Built-ins declare theirs in ``repro.core.schemes.INVARIANTS``.
+    """
 
     def _register(fn):
-        _REGISTRY[name] = Scheme(name=name, builder=fn,
-                                 fixed_workers=fixed_workers,
-                                 truncates=truncates)
+        _REGISTRY[name] = Scheme(
+            name=name, builder=fn, fixed_workers=fixed_workers,
+            truncates=truncates,
+            invariants=invariants or schemes_lib.INVARIANTS.get(name))
         return fn
 
     if builder is None:

@@ -35,6 +35,71 @@ from repro.core.encoder import (
 )
 
 
+@dataclasses.dataclass(frozen=True)
+class SchemeInvariants:
+    """Static decodability profile of a scheme design.
+
+    This is the paper-derived metadata ``repro.analysis`` validates every
+    registered scheme against -- it lives next to the builders so a new
+    scheme declares its own bound instead of the checker hardcoding one.
+
+    optimal_workers -- the information-theoretic minimum worker count whose
+        results decode: ``"mn"`` (one useful row per worker), ``"m"`` (the
+        MDS-on-A code: each worker carries a full coded column of C), or
+        ``"all"`` (uncoded: no redundancy, every worker is critical).
+    exact -- worst-case recovery threshold EQUALS the optimum (the MDS
+        property; any optimal-size subset decodes).
+    mean_overhead / max_overhead -- for non-exact designs, the allowed
+        empirical recovery overhead beyond the optimum, as a fraction of it
+        (plus a small additive slack applied by the checker).  The paper's
+        sparse code is near-optimal: Theta(mn) with small constants.
+    dense_rows -- generator rows are dense (row weight ~ mn, the
+        product-of-coded-matrices designs); sparse designs keep row weight
+        O(log mn) and the checker enforces that cap.
+    cond_warn -- condition-number budget for worst-case survivor subsets of
+        the device plan's coefficient matrix; beyond it the f32 device
+        decode is flagged.  Random sparse designs sit comfortably under the
+        1e8 default; product-of-MDS generators are intrinsically worse
+        conditioned on near-minimal subsets and declare a looser budget.
+    """
+
+    optimal_workers: str = "mn"
+    exact: bool = False
+    mean_overhead: float = 0.5
+    max_overhead: float = 1.0
+    dense_rows: bool = False
+    cond_warn: float = 1e8
+
+    def __post_init__(self):
+        if self.optimal_workers not in ("mn", "m", "all"):
+            raise ValueError(
+                f"optimal_workers must be mn|m|all, got "
+                f"{self.optimal_workers!r}")
+
+    def optimal(self, m: int, n: int, num_workers: int) -> int:
+        if self.optimal_workers == "all":
+            return num_workers
+        return m if self.optimal_workers == "m" else m * n
+
+
+#: per-scheme profiles, keyed by registry name (repro.coded.registry wires
+#: these onto the ``Scheme`` entries at registration)
+INVARIANTS: dict[str, SchemeInvariants] = {
+    "uncoded": SchemeInvariants(optimal_workers="all", exact=True,
+                                mean_overhead=0.0, max_overhead=0.0),
+    "sparse_code": SchemeInvariants(mean_overhead=0.30, max_overhead=0.80),
+    "lt_code": SchemeInvariants(mean_overhead=0.80, max_overhead=1.60),
+    "sparse_mds": SchemeInvariants(mean_overhead=0.30, max_overhead=0.80),
+    "polynomial": SchemeInvariants(exact=True, mean_overhead=0.0,
+                                   max_overhead=0.0, dense_rows=True),
+    "mds": SchemeInvariants(optimal_workers="m", exact=True,
+                            mean_overhead=0.0, max_overhead=0.0,
+                            dense_rows=True),
+    "product": SchemeInvariants(mean_overhead=0.80, max_overhead=1.60,
+                                dense_rows=True, cond_warn=1e11),
+}
+
+
 @dataclasses.dataclass
 class CodeInstance:
     """A realized code: worker -> generator rows, costs, decode policy."""

@@ -1,0 +1,10 @@
+"""PLANTED: compat-boundary violations (experimental import + gated attr)."""
+
+from jax.experimental import shard_map  # line 3: violation
+
+
+def build(devices):
+    mesh = __import__("jax").make_mesh  # noqa: F841
+    import jax
+
+    return jax.make_mesh((len(devices),), ("model",))  # line 10: violation

@@ -1,0 +1,8 @@
+"""PLANTED: no-deprecated-surface violations -- import AND call of the
+legacy coded_matmul shim."""
+
+from repro.core.coded_matmul import coded_matmul  # line 4: violation
+
+
+def run(A, B, plan, mesh):
+    return coded_matmul(A, B, plan, mesh)  # line 8: violation

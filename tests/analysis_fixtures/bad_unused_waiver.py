@@ -1,0 +1,7 @@
+"""PLANTED: a waiver that suppresses nothing is itself an error."""
+
+import numpy as np
+
+
+def harmless(x):
+    return np.asarray(x)  # repro: allow(matrix-rank-hot-path)

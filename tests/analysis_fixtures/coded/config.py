@@ -1,0 +1,6 @@
+"""PLANTED: jax-free-module violation -- this path declares itself
+importable before XLA_FLAGS, yet imports jax at module scope."""
+
+import jax.numpy as jnp  # line 4: violation
+
+DEFAULT = jnp.float32

@@ -1,0 +1,12 @@
+"""The compat module ITSELF may touch version-gated APIs (rule exemption)."""
+
+try:
+    from jax.experimental.shard_map import shard_map
+except ImportError:
+    from jax import shard_map
+
+
+def make_mesh(shape, names):
+    import jax
+
+    return jax.make_mesh(shape, names)

@@ -1,0 +1,10 @@
+"""Clean twin: a declared jax-free module using the sanctioned lazy-import
+pattern (function-local jax import is fine)."""
+
+import numpy as np
+
+
+def to_device(x):
+    import jax.numpy as jnp
+
+    return jnp.asarray(np.asarray(x))

@@ -1,0 +1,9 @@
+"""Clean: jax.experimental.pallas is the kernel substrate, allowed under
+kernels/ (compat deliberately does not wrap it)."""
+
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def grid(n):
+    return pl.cdiv(n, 8), pltpu

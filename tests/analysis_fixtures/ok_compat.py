@@ -1,0 +1,7 @@
+"""Clean twin of bad_compat: version-gated APIs reached through compat."""
+
+from repro import compat
+
+
+def build(devices):
+    return compat.make_mesh((len(devices),), ("model",))

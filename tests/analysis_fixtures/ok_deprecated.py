@@ -1,0 +1,8 @@
+"""Clean twin: the supported surface (CodedOp plan -> bind -> apply)."""
+
+from repro.coded import CodedMatmulConfig, from_plan
+
+
+def run(A, B, plan, mesh):
+    op = from_plan(CodedMatmulConfig(), plan).bind(mesh)
+    return op.apply(A, B)

@@ -1,0 +1,7 @@
+"""PLANTED: matrix-rank-hot-path violation -- per-event rank recompute."""
+
+import numpy as np
+
+
+def on_worker_done(M, rows):
+    return np.linalg.matrix_rank(M[rows]) >= M.shape[1]  # line 7: violation

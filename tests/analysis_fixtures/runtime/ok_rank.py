@@ -1,0 +1,8 @@
+"""Clean twin: a one-shot construction-time rank check carries a waiver."""
+
+import numpy as np
+
+
+def build_plan(M, d):
+    # repro: allow(matrix-rank-hot-path)
+    return np.linalg.matrix_rank(M) >= d

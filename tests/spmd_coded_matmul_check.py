@@ -26,6 +26,10 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat
+from repro.analysis.jaxpr_check import (
+    assert_detector_sensitivity,
+    stacked_intermediates,
+)
 from repro.coded import CodedMatmulConfig, from_plan
 from repro.core.coded_matmul import (
     chunk_mask_progress,
@@ -57,55 +61,25 @@ def _kill_masks(plan, n_dead_options=(1, 2)):
     return masks
 
 
-def _walk_avals(jaxpr):
-    """Every output aval of every equation, descending into sub-jaxprs."""
-    from jax.core import ClosedJaxpr, Jaxpr
-
-    def subs(val):
-        if isinstance(val, ClosedJaxpr):
-            yield val.jaxpr
-        elif isinstance(val, Jaxpr):
-            yield val
-        elif isinstance(val, (list, tuple)):
-            for v in val:
-                yield from subs(v)
-
-    for eqn in jaxpr.eqns:
-        for v in eqn.outvars:
-            yield eqn.primitive.name, v.aval
-        for param in eqn.params.values():
-            for sub in subs(param):
-                yield from _walk_avals(sub)
-
-
 def check_no_stacked_intermediate(A, B, plan, mesh, ell, s):
     """The nnz-proportional claim, enforced on the trace: no gather/reshape
     in the block_sparse program may produce an array with a max_degree * s
-    dimension (the old stacked B_tall / stacked-operand row count)."""
+    dimension (the old stacked B_tall / stacked-operand row count).
+
+    The detector itself lives in ``repro.analysis.jaxpr_check`` (shared with
+    the ``python -m repro.analysis`` CI gate); this check exercises the same
+    pass on this plan's staged program, plus the pass's own sensitivity
+    probe against the legacy stacked gather."""
     op = _op(plan, mesh, "block_sparse")
     closed = jax.make_jaxpr(lambda a, b: op.apply(a, b, a_sparse=ell))(A, B)
     stacked = plan.max_degree * s
-    offenders = [
-        (prim, tuple(aval.shape))
-        for prim, aval in _walk_avals(closed.jaxpr)
-        if getattr(aval, "shape", ()) and aval.shape[0] == stacked
-    ]
+    offenders = stacked_intermediates(closed.jaxpr, stacked)
     assert not offenders, (
         f"block_sparse path materializes a {stacked}-row intermediate "
         f"(max_degree={plan.max_degree} * s={s}): {offenders}")
     # detector sensitivity: the OLD B_tall gather/transpose/reshape must trip
-    L, (_, t) = plan.max_degree, B.shape
-    n, bt = plan.n, t // plan.n
-
-    def old_stack(b):
-        bsel = jnp.take(b.reshape(s, n, bt), jnp.zeros((L,), jnp.int32), axis=1)
-        return bsel.transpose(1, 0, 2).reshape(L * s, bt)
-
-    tripped = [
-        aval for _, aval in _walk_avals(jax.make_jaxpr(old_stack)(B).jaxpr)
-        if getattr(aval, "shape", ()) and aval.shape[0] == stacked
-    ]
-    assert tripped, "jaxpr walker failed to flag the legacy stacked gather"
+    _, t = B.shape
+    assert_detector_sensitivity(plan.max_degree, s, plan.n, t // plan.n)
 
 
 def _chunk_masks(plan, q=2, want=1):

@@ -126,6 +126,19 @@ def test_config_normalizes_dtype_spellings():
     assert hash(CodedMatmulConfig()) == hash(CodedMatmulConfig(out_dtype="f4"))
 
 
+def test_config_rejects_float64_spellings():
+    # the analysis dtype-policy pass would flag a staged f64 program; the
+    # config rejects every spelling of it at construction instead
+    for spelling in ("float64", np.float64, "f8", "double", float):
+        with pytest.raises(ValueError, match="f32-accumulated"):
+            CodedMatmulConfig(out_dtype=spelling)
+    with pytest.raises(ValueError, match="f32-accumulated"):
+        CodedMatmulConfig(out_dtype="complex128")
+    # reduced-precision spellings stay legal
+    for ok in ("float16", "bfloat16", "float32"):
+        assert CodedMatmulConfig(out_dtype=ok).out_dtype == ok
+
+
 # --------------------------------- CodedOp -----------------------------------
 
 def test_op_lifecycle_unbound_then_bound():
