@@ -1,0 +1,124 @@
+"""Chaos recovery time: process runtime (real faults) vs simulator prediction.
+
+For each fault class the chaos language speaks (kill mid-chunk, pause past
+the heartbeat deadline, slow 10x, drop_result), run the SAME fault
+realization twice:
+
+* measured -- ``run_proc_job`` injects the fault into real spawn-started
+  subprocess workers and the master recovers from the surviving chunk
+  prefixes; we report its compute (recovery) wall time.
+* predicted -- ``run_coded_job`` under ``FaultRealization(plan)``, the
+  simulator twin that edits the (N, q) chunk timeline the way the injector
+  edits reality (stretch / cut / shift), with ``unit_block_time`` calibrated
+  from an UNFAULTED process-runtime baseline so the two clocks agree on what
+  a healthy job costs.
+
+Persisted under the ``chaos`` key of BENCH_coded_matmul.json (merged, never
+clobbering other suites' keys): per class the measured and predicted recovery
+seconds, their ratio, and the fault ledger kinds the run produced -- CI
+tracks that real recovery stays within sight of the model.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, merge_into_bench_json, sparse_bernoulli
+from repro.core import schemes
+from repro.core.encoder import compute_block_products, split_blocks
+from repro.runtime import NoStragglers, run_coded_job
+from repro.runtime.chaos import (
+    FaultPlan,
+    FaultRealization,
+    drop_result,
+    kill,
+    pause,
+    slow,
+)
+from repro.runtime.procpool import run_proc_job
+
+M_SPLIT = N_SPLIT = 2
+NUM_WORKERS = 8
+NUM_CHUNKS = 4
+SLEEP = 0.4          # injected per-worker sleep, spread across chunks
+HB_DEADLINE = 1.0
+
+FAULT_CLASSES = [
+    ("kill", lambda: [kill(1, after_chunk=0)]),
+    ("pause_past_deadline", lambda: [pause(2, after_chunk=0)]),
+    ("slow10x", lambda: [slow(3, factor=10.0)]),
+    ("drop_result", lambda: [drop_result(1, chunk=1)]),
+]
+
+
+def _job_inputs(rng):
+    A = sparse_bernoulli(rng, 60, 24, 500)
+    B = sparse_bernoulli(rng, 60, 20, 400)
+    A_blocks = split_blocks(A, M_SPLIT)
+    B_blocks = split_blocks(B, N_SPLIT)
+    prods = compute_block_products(A_blocks, B_blocks)
+    blocks_true = [prods[i][j] for i in range(M_SPLIT) for j in range(N_SPLIT)]
+    return A_blocks, B_blocks, blocks_true
+
+
+def _proc(code, A_blocks, B_blocks, plan):
+    rep = run_proc_job(
+        code, A_blocks, B_blocks, N_SPLIT, num_chunks=NUM_CHUNKS,
+        straggler_sleep={w: SLEEP for w in range(NUM_WORKERS)},
+        plan=plan, timeout=60.0,
+        heartbeat_interval=0.05, heartbeat_deadline=HB_DEADLINE)
+    return rep
+
+
+def run(quick: bool = True):
+    trials = 1 if quick else 3
+    rng = np.random.default_rng(13)
+    A_blocks, B_blocks, blocks_true = _job_inputs(rng)
+    code = schemes.sparse_code(M_SPLIT, N_SPLIT, NUM_WORKERS, seed=4)
+
+    # ---- calibrate the simulator clock against an unfaulted process run ----
+    baseline = [_proc(code, A_blocks, B_blocks, None) for _ in range(trials)]
+    measured_base = float(np.mean([r.sim_compute_time for r in baseline]))
+    sim_base = run_coded_job(code, blocks_true, NoStragglers(),
+                             rng=np.random.default_rng(0),
+                             unit_block_time=1.0,
+                             num_chunks=NUM_CHUNKS).sim_compute_time
+    unit = measured_base / max(float(sim_base), 1e-9)
+
+    results = {
+        "num_workers": NUM_WORKERS, "num_chunks": NUM_CHUNKS,
+        "straggler_sleep": SLEEP, "heartbeat_deadline": HB_DEADLINE,
+        "trials": trials,
+        "baseline_proc_seconds": measured_base,
+        "calibrated_unit_block_time": unit,
+        "classes": {},
+    }
+    rows = [Row("chaos/baseline_proc", measured_base * 1e6,
+                f"unfaulted proc run, unit={unit:.4f}s/block")]
+
+    for name, plan_for in FAULT_CLASSES:
+        plan = FaultPlan.coerce(plan_for())
+        measured, kinds = [], []
+        for _ in range(trials):
+            rep = _proc(code, A_blocks, B_blocks, plan)
+            measured.append(rep.sim_compute_time)
+            kinds = sorted({e["kind"] for e in rep.fault_ledger})
+        measured_s = float(np.mean(measured))
+        predicted_s = float(run_coded_job(
+            code, blocks_true, FaultRealization(plan=plan),
+            rng=np.random.default_rng(0), unit_block_time=unit,
+            num_chunks=NUM_CHUNKS).sim_compute_time)
+        ratio = measured_s / max(predicted_s, 1e-9)
+        results["classes"][name] = {
+            "measured_recovery_seconds": measured_s,
+            "predicted_recovery_seconds": predicted_s,
+            "measured_over_predicted": ratio,
+            "ledger_kinds": kinds,
+        }
+        rows.append(Row(
+            f"chaos/{name}", measured_s * 1e6,
+            f"measured={measured_s:.3f}s predicted={predicted_s:.3f}s "
+            f"ratio={ratio:.2f} ledger={'+'.join(kinds)}"))
+
+    merge_into_bench_json({"chaos": results})
+    return rows

@@ -14,6 +14,7 @@ import sys
 import time
 
 from benchmarks import (
+    bench_chaos,
     bench_completion,
     bench_components,
     bench_coded_matmul,
@@ -29,6 +30,7 @@ SUITES = {
     "components": bench_components,  # Fig 6
     "decode": bench_decode,          # Theorem 1
     "coded_matmul": bench_coded_matmul,  # SPMD integration
+    "chaos": bench_chaos,            # process runtime vs simulator twin
 }
 
 

@@ -61,6 +61,7 @@ class IncrementalRankTracker:
         self.dim = int(dim)
         self.tol = float(tol)
         self.rank = 0
+        self.rows_seen = 0  # rows folded in (feeds ExecutionReport.decode_stats)
         self._Q = np.zeros((self.dim, self.dim))  # rows 0..rank-1: the basis
 
     @property
@@ -69,6 +70,7 @@ class IncrementalRankTracker:
 
     def add(self, row: np.ndarray) -> bool:
         """Fold one row in; returns True iff it increased the rank."""
+        self.rows_seen += 1
         if self.is_full:
             return False
         v = np.asarray(

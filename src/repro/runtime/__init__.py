@@ -14,6 +14,8 @@ from repro.runtime.executor import (
     run_device_job,
     run_live_job,
 )
+from repro.runtime.chaos import FaultLedger, FaultPlan, FaultRealization
+from repro.runtime.procpool import ProcPool, run_proc_job
 
 __all__ = [
     "StragglerModel",
@@ -25,9 +27,14 @@ __all__ = [
     "ExponentialStragglers",
     "ShiftedExponential",
     "ExecutionReport",
+    "FaultLedger",
+    "FaultPlan",
+    "FaultRealization",
+    "ProcPool",
     "run_coded_job",
     "run_device_job",
     "run_live_job",
+    "run_proc_job",
     "pack_cache",
 ]
 

@@ -12,7 +12,7 @@ equations, the partial-straggler protocol of Das & Ramamoorthy
 (arXiv 2012.06065 / 2109.12070).  ``num_chunks=1`` is the paper's atomic
 protocol, same arrivals, same decode.
 
-Three entry points share that loop or wrap the device path:
+Four entry points share that loop or wrap the device path:
 
 * ``run_coded_job`` -- event-driven simulation.  Chunk completion times are
   drawn from (per-chunk nominal work x straggler model); the master replays
@@ -26,7 +26,16 @@ Three entry points share that loop or wrap the device path:
   a queue; the master consumes (the MPI Isend/Irecv/Waitany analogue)
   through the same event loop.  A worker that hangs past ``timeout``
   surfaces as a ``DecodingError`` naming the silent workers, never a bare
-  ``queue.Empty``.
+  ``queue.Empty``; a worker thread that *exits* early (exception, stop
+  flag) posts a terminal sentinel so the master stops expecting its
+  arrivals instead of burning the full timeout on a known-dead worker.
+
+* ``runtime.procpool.run_proc_job`` -- the same protocol with workers as
+  real OS subprocesses (spawn + pipe transport), so faults are real:
+  workers can be SIGKILLed, SIGSTOPped, or throttled mid-chunk
+  (``runtime.chaos``) and the master recovers from whatever chunk
+  prefixes survived.  Its event source feeds this module's
+  ``_consume_events`` unchanged -- one protocol, three transports.
 
 * ``run_device_job`` -- the SPMD device path: a thin timing wrapper over
   ``repro.coded.CodedOp`` (workers = devices, decode = one psum, or a
@@ -64,14 +73,20 @@ class ExecutionReport:
     blocks: list | None = None
     num_chunks: int = 1           # sub-tasks per worker (1 = atomic protocol)
     chunks_used: int = 0          # chunk arrivals consumed before decoding
+    #: chronological fault ledger (process runtime): one dict per observed or
+    #: injected fault -- kind, worker, time, and for terminal faults the
+    #: equations lost vs recovered.  Empty for the thread/sim/device paths.
+    fault_ledger: list = dataclasses.field(default_factory=list)
 
     def summary(self) -> str:
         chunks = (f" ({self.chunks_used} chunks, q={self.num_chunks})"
                   if self.num_chunks > 1 else "")
+        faults = (f" [{len(self.fault_ledger)} fault events]"
+                  if self.fault_ledger else "")
         return (f"{self.scheme}: waited {self.workers_used}/{self.num_workers} workers"
                 f"{chunks}, "
                 f"compute {self.sim_compute_time:.4f}s + decode {self.decode_wall_time:.4f}s "
-                f"= {self.total_time:.4f}s")
+                f"= {self.total_time:.4f}s{faults}")
 
 
 # --------------------------- the master event loop ---------------------------
@@ -93,6 +108,19 @@ class _MasterState:
     progress: np.ndarray                  # (N,) chunks consumed per worker
     results_by_row: dict[int, object]     # expanded-M row id -> block payload
     stop_time: float                      # event time of the decisive arrival
+    exact_checks: int = 0                 # scheme-exact decodability tests run
+    tracker_rows: int = 0                 # rows folded into the rank tracker
+    tracker_rank: int = 0                 # tracker rank at stop
+
+    def decode_stats(self, faults: dict | None = None) -> dict:
+        """The host-path ``ExecutionReport.decode_stats`` payload."""
+        return {
+            "arrivals_consumed": len(self.pairs),
+            "tracker_rows": self.tracker_rows,
+            "tracker_rank": self.tracker_rank,
+            "exact_checks": self.exact_checks,
+            "faults": faults or {},
+        }
 
 
 def _consume_events(
@@ -115,6 +143,7 @@ def _consume_events(
     results_by_row: dict[int, object] = {}
     pairs: list[tuple[int, int]] = []
     last_time = 0.0
+    exact_checks = 0
     why = (f"{chunked.name}: not decodable even with all "
            f"{chunked.num_workers} workers' chunks")
     try:
@@ -129,9 +158,15 @@ def _consume_events(
             for r, blk in payload.items():
                 results_by_row[r] = blk
                 tracker.add(np.asarray(chunked.M[r].todense()))
-            if tracker.is_full and chunked.can_decode(pairs):
-                return _MasterState(pairs=pairs, progress=progress,
-                                    results_by_row=results_by_row, stop_time=t)
+            if tracker.is_full:
+                exact_checks += 1
+                if chunked.can_decode(pairs):
+                    return _MasterState(
+                        pairs=pairs, progress=progress,
+                        results_by_row=results_by_row, stop_time=t,
+                        exact_checks=exact_checks,
+                        tracker_rows=tracker.rows_seen,
+                        tracker_rank=tracker.rank)
     except _EventSourceDry as dry:
         never = np.flatnonzero(progress == 0).tolist()
         stalled = np.flatnonzero(
@@ -141,9 +176,13 @@ def _consume_events(
                               if stalled else ""))
     # events exhausted (or the source dried up): the tracker is a float
     # gate, so give the exact test the last word before declaring failure
+    exact_checks += 1
     if chunked.can_decode(pairs):
         return _MasterState(pairs=pairs, progress=progress,
-                            results_by_row=results_by_row, stop_time=last_time)
+                            results_by_row=results_by_row, stop_time=last_time,
+                            exact_checks=exact_checks,
+                            tracker_rows=tracker.rows_seen,
+                            tracker_rank=tracker.rank)
     raise DecodingError(why)
 
 
@@ -193,19 +232,36 @@ def _live_events(
 ) -> Iterator[tuple[float, int, int, dict[int, object]]]:
     """Arrivals drained from the worker threads' queue (wall-clock times).
 
-    A dry queue past ``timeout`` means some worker hung: signal the master
+    The source expects ``num_chunks`` arrivals per worker but *learns* of
+    terminal worker failure: a worker thread that exits posts the sentinel
+    ``(w, None, None)``, which zeroes its outstanding count -- so a
+    known-dead worker costs nothing once everyone else has reported,
+    instead of a full ``timeout`` wait per missing chunk.  A dry queue past
+    ``timeout`` means some worker hung without exiting: signal the master
     loop (which names the silent/stalled workers in a ``DecodingError``
     after the exact decodability test gets the last word) instead of
     leaking ``queue.Empty`` to the caller.
     """
-    for _ in range(num_workers * num_chunks):
+    outstanding = np.full(num_workers, num_chunks, dtype=np.int64)
+    exited_early: list[int] = []
+    while int(outstanding.sum()) > 0:
         try:
             w, c, payload = q_.get(timeout=timeout)
         except queue.Empty:
             raise _EventSourceDry(
                 f"no worker result within {timeout:.1f}s and the collected "
                 "chunks do not decode (hung or dead workers?)") from None
+        if c is None:  # terminal sentinel: worker w will deliver nothing more
+            if outstanding[w] > 0:
+                exited_early.append(int(w))
+                outstanding[w] = 0
+            continue
+        outstanding[w] -= 1
         yield time.perf_counter() - t0, w, c, payload
+    if exited_early:
+        raise _EventSourceDry(
+            f"worker thread(s) {sorted(set(exited_early))} exited before "
+            "delivering all chunks")
 
 
 # ------------------------------- entry points -------------------------------
@@ -250,7 +306,7 @@ def run_coded_job(
         sim_compute_time=float(state.stop_time),
         decode_wall_time=decode_time,
         total_time=float(state.stop_time) + decode_time,
-        decode_stats={},
+        decode_stats=state.decode_stats(),
         blocks=blocks if keep_blocks else None,
         num_chunks=num_chunks,
         chunks_used=len(state.pairs),
@@ -275,6 +331,13 @@ def run_live_job(
     consumes through the shared event loop and stops at the first decodable
     chunk prefix -- a straggler's finished chunks count, its unfinished
     ones genuinely never get waited on.
+
+    Workers observe the stop flag before *every* matmul and sleep
+    interruptibly (``stop.wait``), and the master joins them with a bounded
+    timeout before returning -- an early decode does not leak threads that
+    keep computing (or sleeping) the remaining chunks in the background.
+    A worker that raises exits through its terminal sentinel, so the master
+    stops expecting it instead of waiting out the timeout.
     """
     del num_threads  # one thread per worker, as the protocol prescribes
     straggler_sleep = straggler_sleep or {}
@@ -288,20 +351,28 @@ def run_live_job(
         delay = straggler_sleep.get(w, 0.0) / num_chunks
         row_chunks = {r: tasks_by_row[r].chunks(num_chunks)
                       for r in code.worker_rows[w]}
-        for c in range(num_chunks):
-            if delay:
-                time.sleep(delay)
-            if stop.is_set():
-                return
-            payload = {}
-            for r, chunks in row_chunks.items():
-                out = encode_blocks(chunks[c], A_blocks, B_blocks, n)
-                if out is not None:
-                    payload[r * num_chunks + c] = out
-            q_.put((w, c, payload))
+        try:
+            for c in range(num_chunks):
+                if delay and stop.wait(delay):  # interruptible sleep
+                    return
+                payload = {}
+                for r, chunks in row_chunks.items():
+                    if stop.is_set():
+                        return
+                    out = encode_blocks(chunks[c], A_blocks, B_blocks, n)
+                    if out is not None:
+                        payload[r * num_chunks + c] = out
+                if stop.is_set():
+                    return
+                q_.put((w, c, payload))
+        except Exception:
+            pass  # the sentinel below tells the master w is terminal
+        finally:
+            q_.put((w, None, None))
 
     t0 = time.perf_counter()
-    threads = [threading.Thread(target=worker_fn, args=(w,), daemon=True)
+    threads = [threading.Thread(target=worker_fn, args=(w,), daemon=True,
+                                name=f"live-worker-{w}")
                for w in range(code.num_workers)]
     for t in threads:
         t.start()
@@ -312,6 +383,12 @@ def run_live_job(
                                   timeout, t0))
     finally:
         stop.set()
+        # bounded join: stop-aware workers exit after at most one more block
+        # matmul (sleeps wake immediately on stop); the daemon flag stays as
+        # the backstop for a truly wedged one
+        join_deadline = time.perf_counter() + 5.0
+        for t in threads:
+            t.join(timeout=max(0.0, join_deadline - time.perf_counter()))
     compute_time = time.perf_counter() - t0
 
     t1 = time.perf_counter()
@@ -325,7 +402,7 @@ def run_live_job(
         sim_compute_time=compute_time,
         decode_wall_time=decode_time,
         total_time=compute_time + decode_time,
-        decode_stats={},
+        decode_stats=state.decode_stats(),
         blocks=blocks,
         num_chunks=num_chunks,
         chunks_used=len(state.pairs),

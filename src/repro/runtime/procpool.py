@@ -1,0 +1,420 @@
+"""Out-of-process worker pool: real subprocesses, real faults, one protocol.
+
+``run_live_job`` runs workers as daemon threads -- they share a GIL and a
+fate, so a "straggler" is an injected sleep and a "dead worker" is a thought
+experiment.  This module promotes workers to spawn-started OS subprocesses
+with a per-worker pipe transport and serializes their ``(worker, chunk,
+payload)`` arrivals into the SAME master loop
+(``runtime.executor._consume_events``) the simulator and the thread runtime
+feed -- the event-source abstraction of DESIGN.md section 8 holds; only the
+transport changed.  What the process boundary buys (DESIGN.md section 10):
+
+* workers can actually crash (SIGKILL mid-chunk -> pipe EOF + exit code),
+  hang (SIGSTOP freezes compute *and* heartbeats), or genuinely run slow
+  (duty-cycled SIGSTOP/SIGCONT) -- see ``runtime.chaos`` for the fault plan
+  language;
+* the master grows the robustness a thread pool never needed: per-worker
+  heartbeats with a deadline (an overdue worker stops being waited on but
+  its late arrivals still count), crash detection via pipe EOF + exit code,
+  optional one-shot respawn that reassigns a dead worker's remaining chunk
+  suffix to a fresh process, and graceful degradation to decoding from
+  whatever ordered chunk prefixes survived;
+* every fault -- injected or observed -- lands in a ``FaultLedger`` that
+  ``ExecutionReport.fault_ledger`` exposes, with terminal entries accounting
+  equations lost vs recovered.
+
+Wire format (master <- worker, pickled tuples over one simplex pipe per
+worker): ``("hello", w, pid)`` once at start, ``("hb", w)`` every heartbeat
+interval from a daemon thread (so beats keep flowing during a long chunk but
+stop when the process is frozen or dead), ``("chunk", w, c, payload)`` per
+completed chunk in order, ``("done", w)`` before a clean exit.  Pipe EOF
+without ``done`` is a crash, whatever the exit code says.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing
+import os
+import threading
+import time
+from multiprocessing import connection as mp_connection
+
+import numpy as np
+
+from repro.core.encoder import encode_blocks, make_tasks
+from repro.core.schemes import CodeInstance
+from repro.runtime.chaos import FaultInjector, FaultLedger, FaultPlan
+from repro.runtime.executor import (
+    ExecutionReport,
+    _EventSourceDry,
+    _consume_events,
+)
+
+#: master poll cadence, seconds: the wait() timeout between liveness sweeps
+_POLL = 0.02
+
+
+# ------------------------------- worker side --------------------------------
+
+def _worker_main(worker, conn, row_chunks, A_blocks, B_blocks, n,
+                 num_chunks, start_chunk, chunk_sleep, hb_interval):
+    """Subprocess entry point (spawn target; must stay module-level).
+
+    Computes the worker's ordered chunk stream exactly like the thread
+    runtime's ``worker_fn`` and sends each result over the pipe.  A daemon
+    heartbeat thread shares the connection under a lock: beats prove the
+    *process* is scheduled, independent of chunk progress.
+    """
+    send_lock = threading.Lock()
+
+    def _send(msg) -> bool:
+        try:
+            with send_lock:
+                conn.send(msg)
+            return True
+        except (BrokenPipeError, OSError, ValueError):
+            return False  # master went away: nothing left to report to
+
+    _send(("hello", worker, os.getpid()))
+    stop_hb = threading.Event()
+
+    def _beat():
+        while not stop_hb.wait(hb_interval):
+            if not _send(("hb", worker)):
+                return
+
+    threading.Thread(target=_beat, daemon=True).start()
+    try:
+        for c in range(start_chunk, num_chunks):
+            if chunk_sleep:
+                time.sleep(chunk_sleep)
+            payload = {}
+            for r, chunks in row_chunks.items():
+                out = encode_blocks(chunks[c], A_blocks, B_blocks, n)
+                if out is not None:
+                    payload[r * num_chunks + c] = out
+            if not _send(("chunk", worker, c, payload)):
+                return
+        _send(("done", worker))
+    finally:
+        stop_hb.set()
+        conn.close()
+
+
+# ------------------------------- master side --------------------------------
+
+@dataclasses.dataclass
+class _WorkerState:
+    """Master-side view of one worker process's lifecycle."""
+
+    proc: object
+    conn: object                  # recv end; None once EOF'd/severed
+    pid: int | None = None
+    last_seen: float = 0.0        # perf_counter of the last message
+    next_chunk: int = 0           # next in-order chunk the master will accept
+    done: bool = False            # clean "done" sentinel received
+    dead: bool = False            # EOF before done (crash)
+    overdue: bool = False         # missed the heartbeat deadline
+    dropped: bool = False         # stream severed by a drop_result fault
+    respawned: bool = False       # one-shot respawn already spent
+
+
+class ProcPool:
+    """Spawn-based worker pool whose ``events()`` iterator is a master-loop
+    event source (the third transport after simulation and threads)."""
+
+    def __init__(self, code: CodeInstance, num_chunks: int,
+                 A_blocks, B_blocks, n: int, *,
+                 straggler_sleep: dict[int, float] | None = None,
+                 heartbeat_interval: float = 0.05,
+                 heartbeat_deadline: float = 2.0,
+                 respawn: bool = False,
+                 plan=None):
+        self.code = code
+        self.num_chunks = int(num_chunks)
+        self.A_blocks, self.B_blocks, self.n = A_blocks, B_blocks, n
+        self.straggler_sleep = dict(straggler_sleep or {})
+        self.hb_interval = float(heartbeat_interval)
+        self.hb_deadline = float(heartbeat_deadline)
+        self.respawn = bool(respawn)
+        if self.hb_deadline <= self.hb_interval:
+            raise ValueError("heartbeat_deadline must exceed the interval")
+
+        self.ledger = FaultLedger()
+        plan = FaultPlan.coerce(plan)
+        plan.validate(code.num_workers, self.num_chunks)
+        self.injector = FaultInjector(plan, self.ledger)
+
+        self._ctx = multiprocessing.get_context("spawn")
+        tasks_by_row = {t.worker: t for t in make_tasks(code.M)}
+        self._row_chunks = {
+            w: {r: tasks_by_row[r].chunks(self.num_chunks)
+                for r in code.worker_rows[w]}
+            for w in range(code.num_workers)
+        }
+        self._workers: dict[int, _WorkerState] = {}
+        self._t0 = 0.0
+
+    # ------------------------------ lifecycle -----------------------------
+
+    def start(self) -> float:
+        self._t0 = time.perf_counter()
+        self.ledger.t0 = self._t0
+        for w in range(self.code.num_workers):
+            self._spawn(w, 0)
+        return self._t0
+
+    def _spawn(self, w: int, start_chunk: int, respawned: bool = False):
+        recv_end, send_end = self._ctx.Pipe(duplex=False)
+        chunk_sleep = self.straggler_sleep.get(w, 0.0) / self.num_chunks
+        proc = self._ctx.Process(
+            target=_worker_main,
+            args=(w, send_end, self._row_chunks[w], self.A_blocks,
+                  self.B_blocks, self.n, self.num_chunks, start_chunk,
+                  chunk_sleep, self.hb_interval),
+            daemon=True, name=f"proc-worker-{w}")
+        proc.start()
+        send_end.close()  # keep only the child's copy: EOF tracks its death
+        self._workers[w] = _WorkerState(
+            proc=proc, conn=recv_end, last_seen=time.perf_counter(),
+            next_chunk=start_chunk, respawned=respawned)
+
+    def shutdown(self) -> None:
+        """Injector off, every child unfrozen/terminated/reaped, pipes
+        closed.  Idempotent; safe after partial startup."""
+        self.injector.shutdown()
+        for st in self._workers.values():
+            if st.proc.is_alive():
+                st.proc.terminate()
+        deadline = time.perf_counter() + 5.0
+        for st in self._workers.values():
+            st.proc.join(timeout=max(0.1, deadline - time.perf_counter()))
+            if st.proc.is_alive():  # pragma: no cover - SIGKILL backstop
+                st.proc.kill()
+                st.proc.join(timeout=1.0)
+            if st.conn is not None:
+                st.conn.close()
+                st.conn = None
+
+    # ----------------------------- event source ---------------------------
+
+    def events(self, timeout: float):
+        """Yield ``(time, worker, chunk, payload)`` for ``_consume_events``.
+
+        Ends (StopIteration) only when every worker delivered every chunk;
+        raises ``_EventSourceDry`` when the survivors' arrivals are drained
+        but some stream ended early (crash/drop/overdue), or when nothing
+        arrives for ``timeout`` seconds -- the master then decides whether
+        the collected prefixes decode anyway.
+        """
+        last_progress = time.perf_counter()
+        while True:
+            conns = {st.conn: w for w, st in self._workers.items()
+                     if st.conn is not None}
+            if conns:
+                ready = mp_connection.wait(list(conns), timeout=_POLL)
+            else:
+                time.sleep(_POLL)
+                ready = []
+            now = time.perf_counter()
+            for conn in ready:
+                w = conns[conn]
+                for evt in self._drain(w, now):
+                    last_progress = time.perf_counter()
+                    yield evt
+            self._sweep_deadlines(time.perf_counter())
+            if not self._expecting():
+                shortfall = self._shortfall_reason()
+                if shortfall:
+                    raise _EventSourceDry(shortfall)
+                return
+            if time.perf_counter() - last_progress > timeout:
+                raise _EventSourceDry(
+                    f"no worker result within {timeout:.1f}s and the "
+                    "collected chunks do not decode (hung or dead workers?)")
+
+    def _drain(self, w: int, now: float):
+        """Consume every buffered message of worker ``w``; yield its in-order
+        chunk events.  EOF classifies the exit (done vs crash) only after the
+        buffer is empty, so a respawn never resends a chunk the dead
+        incarnation already delivered."""
+        st = self._workers[w]
+        while st.conn is not None and st.conn.poll():
+            try:
+                msg = st.conn.recv()
+            except (EOFError, OSError, ValueError):
+                self._on_eof(w, st, now)
+                return
+            st.last_seen = now
+            tag = msg[0]
+            if tag == "hello":
+                st.pid = msg[2]
+                self.injector.on_spawn(w, st.pid)
+            elif tag == "chunk":
+                _, _, c, payload = msg
+                if st.dropped:
+                    continue  # severed stream: later chunks are out of order
+                if self.injector.should_drop(w, c):
+                    st.dropped = True
+                    continue
+                st.next_chunk = c + 1
+                self.injector.on_result(w, c)
+                yield now - self._t0, w, c, payload
+            elif tag == "done":
+                st.done = True
+            # "hb" only refreshes last_seen, handled above
+
+    def _on_eof(self, w: int, st: _WorkerState, now: float) -> None:
+        st.conn.close()
+        st.conn = None
+        st.proc.join(timeout=0.5)  # reap; the write end is gone already
+        if st.done:
+            return
+        st.dead = True
+        self.ledger.record(
+            "crash_detected", w, exitcode=st.proc.exitcode,
+            next_chunk=st.next_chunk)
+        if (self.respawn and not st.respawned
+                and st.next_chunk < self.num_chunks):
+            self.ledger.record("respawn", w, start_chunk=st.next_chunk)
+            self._spawn(w, st.next_chunk, respawned=True)
+
+    def _sweep_deadlines(self, now: float) -> None:
+        for w, st in self._workers.items():
+            # the deadline clock starts at hello: interpreter startup in the
+            # child (pid still unknown) must not read as a missed heartbeat
+            if (st.conn is None or st.pid is None or st.done or st.overdue
+                    or st.next_chunk >= self.num_chunks):
+                continue
+            if now - st.last_seen > self.hb_deadline:
+                st.overdue = True
+                self.ledger.record(
+                    "deadline_missed", w,
+                    silent_for=round(now - st.last_seen, 6),
+                    next_chunk=st.next_chunk)
+
+    def _expecting(self) -> bool:
+        """Is any worker still worth waiting on?"""
+        return any(
+            st.conn is not None and not (st.done or st.overdue or st.dropped)
+            and st.next_chunk < self.num_chunks
+            for st in self._workers.values())
+
+    def _shortfall_reason(self) -> str | None:
+        """Human-readable cause when not every chunk arrived, else None."""
+        crashed = sorted(w for w, st in self._workers.items() if st.dead)
+        dropped = sorted(w for w, st in self._workers.items() if st.dropped)
+        overdue = sorted(
+            w for w, st in self._workers.items()
+            if st.overdue and st.next_chunk < self.num_chunks)
+        parts = []
+        if crashed:
+            parts.append(f"worker process(es) {crashed} crashed")
+        if dropped:
+            parts.append(f"result stream(s) of {dropped} severed by a "
+                         "dropped message")
+        if overdue:
+            parts.append(f"worker(s) {overdue} missed the "
+                         f"{self.hb_deadline:.1f}s heartbeat deadline")
+        return "; ".join(parts) or None
+
+    # ------------------------------ accounting ----------------------------
+
+    def finalize_ledger(self, chunked, progress: np.ndarray) -> list[dict]:
+        """Attach equations lost/recovered to terminal ledger entries.
+
+        ``progress`` is the master's consumed-chunk count per worker; a
+        terminal worker's recovered equations are the expanded-M rows of its
+        consumed prefix, its lost equations the remaining nonempty rows.
+        Only the *observed*-terminal kinds are annotated (the injected
+        ``kill``/``pause`` that caused them would double-count).
+        """
+        for entry in self.ledger.entries:
+            if entry["kind"] not in ("crash_detected", "drop_result",
+                                     "deadline_missed"):
+                continue
+            w = entry["worker"]
+            consumed = int(progress[w]) if w < len(progress) else 0
+            recovered = sum(
+                len(chunked.expanded_rows(w, c)) for c in range(consumed))
+            total = sum(
+                len(chunked.expanded_rows(w, c))
+                for c in range(chunked.num_chunks))
+            entry["equations_recovered"] = recovered
+            entry["equations_lost"] = total - recovered
+        return list(self.ledger.entries)
+
+
+# ------------------------------- entry point --------------------------------
+
+def run_proc_job(
+    code: CodeInstance,
+    A_blocks,
+    B_blocks,
+    n: int,
+    straggler_sleep: dict[int, float] | None = None,
+    num_chunks: int = 1,
+    timeout: float = 60.0,
+    plan=None,
+    heartbeat_interval: float = 0.05,
+    heartbeat_deadline: float = 2.0,
+    respawn: bool = False,
+) -> ExecutionReport:
+    """``run_live_job`` with real OS subprocesses and (optionally) real
+    faults.
+
+    Mirrors ``run_live_job``'s signature and semantics -- same blocks, same
+    chunk-granular protocol, same first-decodable-prefix stop rule -- plus:
+
+    ``plan``      a ``runtime.chaos`` fault plan (or list of faults) the
+                  injector executes against the live worker pids;
+    ``heartbeat_interval`` / ``heartbeat_deadline``
+                  workers beat every interval; a worker silent past the
+                  deadline stops being waited on (its late arrivals still
+                  count if they show up);
+    ``respawn``   one-shot recovery: a crashed worker's remaining chunk
+                  suffix is reassigned to a fresh process resuming at the
+                  next in-order chunk.
+
+    The report carries the full fault ledger and a populated
+    ``decode_stats`` (arrivals, tracker rank, exact-test count, fault
+    summary).  An unrecoverable fault set raises ``DecodingError`` naming
+    the crashed/severed/overdue workers.
+
+    Workers are spawn-started, so a script calling this from module scope
+    needs the standard ``if __name__ == "__main__":`` guard (the child
+    re-imports the caller's main module).
+    """
+    chunked = code.chunked(num_chunks)
+    pool = ProcPool(
+        code, num_chunks, A_blocks, B_blocks, n,
+        straggler_sleep=straggler_sleep,
+        heartbeat_interval=heartbeat_interval,
+        heartbeat_deadline=heartbeat_deadline,
+        respawn=respawn, plan=plan)
+    t0 = pool.start()
+    try:
+        state = _consume_events(chunked, pool.events(timeout))
+        compute_time = time.perf_counter() - t0
+    finally:
+        pool.shutdown()
+
+    t1 = time.perf_counter()
+    blocks = chunked.decode(state.pairs, state.results_by_row)
+    decode_time = time.perf_counter() - t1
+
+    ledger = pool.finalize_ledger(chunked, state.progress)
+    return ExecutionReport(
+        scheme=chunked.name,
+        workers_used=int((state.progress > 0).sum()),
+        num_workers=code.num_workers,
+        sim_compute_time=compute_time,
+        decode_wall_time=decode_time,
+        total_time=compute_time + decode_time,
+        decode_stats=state.decode_stats(faults=pool.ledger.summary()),
+        blocks=blocks,
+        num_chunks=num_chunks,
+        chunks_used=len(state.pairs),
+        fault_ledger=ledger,
+    )

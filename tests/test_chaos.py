@@ -1,0 +1,236 @@
+"""Chaos harness: real subprocess workers, real injected faults.
+
+The process runtime (``runtime.procpool``) must decode through every fault
+class the chaos language speaks -- kill, pause past the heartbeat deadline,
+slow, drop_result -- whenever the surviving chunk prefixes decode, must fail
+fast (naming the faulted workers) when they do not, and must account every
+fault in the report's ledger.
+"""
+
+import time
+
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.core import schemes
+from repro.core.decoder import DecodingError
+from repro.core.encoder import split_blocks
+from repro.runtime.chaos import (
+    Fault,
+    FaultPlan,
+    FaultRealization,
+    drop_result,
+    kill,
+    pause,
+    slow,
+)
+from repro.runtime.procpool import run_proc_job
+
+M_SPLIT = N_SPLIT = 2
+
+
+def _data(seed=0):
+    A = sp.random(40, 16, density=0.3, format="csc",
+                  random_state=np.random.RandomState(seed))
+    B = sp.random(40, 20, density=0.3, format="csc",
+                  random_state=np.random.RandomState(seed + 1))
+    return A, B
+
+
+def _assert_product(rep, A, B):
+    C = (A.T @ B).toarray()
+    br, bt = C.shape[0] // M_SPLIT, C.shape[1] // N_SPLIT
+    for i in range(M_SPLIT):
+        for j in range(N_SPLIT):
+            got = rep.blocks[i * N_SPLIT + j]
+            got = got.toarray() if sp.issparse(got) else np.asarray(got)
+            np.testing.assert_allclose(
+                got, C[i * br:(i + 1) * br, j * bt:(j + 1) * bt], atol=1e-8)
+
+
+def _run(code, plan, *, sleep=0.4, q=4, **kw):
+    A, B = _data()
+    kw.setdefault("straggler_sleep",
+                  {w: sleep for w in range(code.num_workers)})
+    rep = run_proc_job(code, split_blocks(A, M_SPLIT),
+                       split_blocks(B, N_SPLIT), N_SPLIT,
+                       num_chunks=q, plan=plan, timeout=30.0, **kw)
+    return rep, A, B
+
+
+# ----------------------------- the chaos matrix -----------------------------
+
+@pytest.mark.parametrize("fault_for", [
+    lambda: kill(1, after_chunk=0),
+    lambda: pause(2, after_chunk=0),           # frozen until shutdown
+    lambda: slow(3, factor=10.0),
+    lambda: drop_result(1, chunk=1),
+], ids=["kill", "pause_past_deadline", "slow10x", "drop_result"])
+def test_chaos_matrix_recoverable_decodes_and_names_worker(fault_for):
+    """Each fault class, injected mid-chunk on a redundant code: the job
+    decodes the exact product and the ledger names the faulted worker."""
+    fault = fault_for()
+    code = schemes.sparse_code(M_SPLIT, N_SPLIT, N=8, seed=4)
+    rep, A, B = _run(code, [fault], heartbeat_interval=0.05,
+                     heartbeat_deadline=1.0)
+    _assert_product(rep, A, B)
+    faults = rep.decode_stats["faults"]
+    assert fault.worker in faults["workers"]
+    assert faults["by_kind"].get(fault.kind) == 1
+    assert any(e["kind"] == fault.kind and e["worker"] == fault.worker
+               for e in rep.fault_ledger)
+
+
+def test_kill_at_spawn_unrecoverable_names_worker():
+    """uncoded needs every worker: killing one before it delivers anything
+    must raise DecodingError naming it, with the crash in the ledger."""
+    code = schemes.uncoded(M_SPLIT, N_SPLIT)
+    with pytest.raises(DecodingError, match=r"\[1\].*never reported"):
+        _run(code, [kill(1)])
+
+
+def test_pause_past_deadline_unrecoverable_fails_fast():
+    """A paused essential worker trips the heartbeat deadline: the master
+    gives up promptly (long before the job timeout) and names it."""
+    code = schemes.uncoded(M_SPLIT, N_SPLIT)
+    t0 = time.perf_counter()
+    with pytest.raises(DecodingError, match=r"\[1\].*heartbeat deadline"):
+        _run(code, [pause(1)], heartbeat_interval=0.05,
+             heartbeat_deadline=0.5)
+    assert time.perf_counter() - t0 < 15.0  # deadline, not the 30s timeout
+
+
+def test_respawn_recovers_essential_worker():
+    """One-shot respawn: the killed worker's chunks are reassigned to a
+    fresh process, so even a code with zero redundancy completes."""
+    code = schemes.uncoded(M_SPLIT, N_SPLIT)
+    rep, A, B = _run(code, [kill(1)], respawn=True)
+    _assert_product(rep, A, B)
+    kinds = [e["kind"] for e in rep.fault_ledger]
+    assert kinds == ["kill", "crash_detected", "respawn"]
+    crash = rep.fault_ledger[1]
+    assert crash["worker"] == 1 and crash["exitcode"] == -9
+    # the respawned incarnation redelivered everything: nothing stayed lost
+    assert crash["equations_lost"] == 0
+
+
+def test_drop_result_severs_stream_and_accounts_equations():
+    """A dropped chunk message severs the worker's ordered stream; the
+    ledger accounts its consumed prefix vs the lost suffix."""
+    code = schemes.sparse_code(M_SPLIT, N_SPLIT, N=8, seed=4)
+    rep, A, B = _run(code, [drop_result(1, chunk=1)])
+    _assert_product(rep, A, B)
+    entry = next(e for e in rep.fault_ledger if e["kind"] == "drop_result")
+    # sparse_code row of worker 1 spans chunks 0 and 1: chunk 0 was consumed
+    # before the chunk-1 message was lost
+    assert entry["equations_recovered"] == 1
+    assert entry["equations_lost"] == 1
+    faults = rep.decode_stats["faults"]
+    assert faults["equations_lost"] == 1
+    assert faults["equations_recovered"] == 1
+
+
+def test_proc_job_decode_stats_populated():
+    """The process path fills decode_stats like the host paths do, plus the
+    fault summary rollup."""
+    code = schemes.sparse_code(M_SPLIT, N_SPLIT, N=8, seed=4)
+    rep, A, B = _run(code, [kill(1, after_chunk=0)], respawn=False)
+    stats = rep.decode_stats
+    assert stats["arrivals_consumed"] == rep.chunks_used > 0
+    assert stats["tracker_rank"] == code.mn
+    assert stats["tracker_rows"] >= stats["tracker_rank"]
+    assert stats["exact_checks"] >= 1
+    assert stats["faults"]["workers"] == [1]
+
+
+def test_proc_job_no_faults_clean_run():
+    """No plan: the pool is just a transport -- exact product, empty
+    ledger, every worker used."""
+    code = schemes.sparse_code(M_SPLIT, N_SPLIT, N=6, seed=4)
+    rep, A, B = _run(code, None, sleep=0.0, q=2)
+    _assert_product(rep, A, B)
+    assert rep.fault_ledger == []
+    assert rep.decode_stats["faults"]["events"] == 0
+
+
+# --------------------------- plan validation ---------------------------------
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault(kind="meteor", worker=0)
+    with pytest.raises(ValueError, match="factor must be > 1"):
+        slow(0, factor=1.0)
+    with pytest.raises(ValueError, match="needs the chunk"):
+        Fault(kind="drop_result", worker=0)
+    plan = FaultPlan.coerce([kill(5), drop_result(0, chunk=3)])
+    with pytest.raises(ValueError, match="targets worker 5"):
+        plan.validate(num_workers=4, num_chunks=4)
+    with pytest.raises(ValueError, match="chunk 3"):
+        plan.validate(num_workers=8, num_chunks=2)
+    plan.validate(num_workers=8, num_chunks=4)  # geometry fits: no raise
+    assert plan.workers == [0, 5]
+    assert FaultPlan.coerce(None).faults == ()
+    assert FaultPlan.coerce(kill(0)).faults[0].kind == "kill"
+
+
+def test_proc_job_rejects_plan_outside_geometry():
+    code = schemes.uncoded(M_SPLIT, N_SPLIT)
+    A, B = _data()
+    with pytest.raises(ValueError, match="targets worker 9"):
+        run_proc_job(code, split_blocks(A, M_SPLIT),
+                     split_blocks(B, N_SPLIT), N_SPLIT,
+                     num_chunks=2, plan=[kill(9)])
+
+
+# ---------------------- the simulator twin of a plan -------------------------
+
+def test_fault_realization_timeline_edits():
+    """FaultRealization rewrites the (N, q) chunk timeline exactly as the
+    plan prescribes: stretch, cut, shift."""
+    work = np.ones((4, 3))
+    rng = np.random.default_rng(0)
+
+    t = FaultRealization(plan=FaultPlan.coerce([slow(0, factor=10.0)])) \
+        .chunk_completion_times(work, rng)
+    np.testing.assert_allclose(t[0], [10.0, 20.0, 30.0])
+    np.testing.assert_allclose(t[1], [1.0, 2.0, 3.0])
+
+    t = FaultRealization(plan=FaultPlan.coerce([kill(1, after_chunk=0)])) \
+        .chunk_completion_times(work, rng)
+    assert t[1, 0] == 1.0 and np.isinf(t[1, 1:]).all()
+
+    t = FaultRealization(plan=FaultPlan.coerce([kill(2)])) \
+        .chunk_completion_times(work, rng)
+    assert np.isinf(t[2]).all()
+
+    t = FaultRealization(
+        plan=FaultPlan.coerce([pause(3, after_chunk=0, duration=5.0)])) \
+        .chunk_completion_times(work, rng)
+    np.testing.assert_allclose(t[3], [1.0, 7.0, 8.0])
+
+    t = FaultRealization(plan=FaultPlan.coerce([pause(3, after_chunk=1)])) \
+        .chunk_completion_times(work, rng)
+    assert t[3, 0] == 1.0 and t[3, 1] == 2.0 and np.isinf(t[3, 2])
+
+    t = FaultRealization(plan=FaultPlan.coerce([drop_result(0, chunk=1)])) \
+        .chunk_completion_times(work, rng)
+    assert t[0, 0] == 1.0 and np.isinf(t[0, 1:]).all()
+
+
+def test_fault_realization_predicts_simulator_decode():
+    """run_coded_job under a FaultRealization reproduces the process pool's
+    recovery semantics: the killed worker's lost chunks are routed around."""
+    from repro.runtime import run_coded_job
+
+    m, n, N = 2, 2, 8
+    rng = np.random.default_rng(1)
+    blocks = [rng.random((6, 7)) for _ in range(m * n)]
+    code = schemes.sparse_code(m, n, N, seed=4)
+    plan = FaultPlan.coerce([kill(1, after_chunk=0)])
+    rep = run_coded_job(code, blocks, FaultRealization(plan=plan),
+                        rng=rng, num_chunks=4, keep_blocks=True)
+    for got, want in zip(rep.blocks, blocks):
+        got = got.toarray() if sp.issparse(got) else np.asarray(got)
+        np.testing.assert_allclose(got, want, atol=1e-8)
+    assert np.isfinite(rep.sim_compute_time)

@@ -133,6 +133,159 @@ def test_live_job_hung_worker_raises_decoding_error():
         raise AssertionError("queue.Empty leaked to the caller")
 
 
+def test_consume_events_out_of_order_chunk_raises():
+    """Ordered sub-task streams: a chunk arriving ahead of its predecessor
+    is a protocol violation, not a recoverable event."""
+    from repro.runtime.executor import _consume_events
+
+    chunked = schemes.sparse_code(2, 2, N=4, seed=4).chunked(2)
+
+    def events():
+        yield 0.0, 0, 1, {}  # chunk 1 before chunk 0
+
+    with pytest.raises(ValueError, match="out of order"):
+        _consume_events(chunked, events())
+
+
+def test_consume_events_dry_source_names_never_and_stalled():
+    """A dry source's DecodingError distinguishes workers that never
+    reported from workers that stalled mid-stream."""
+    from repro.core.decoder import DecodingError
+    from repro.runtime.executor import (
+        _EventSourceDry,
+        _chunk_result,
+        _consume_events,
+    )
+
+    rng = np.random.default_rng(11)
+    blocks = _blocks(rng, 4)
+    chunked = schemes.sparse_code(2, 2, N=4, seed=4).chunked(2)
+
+    def events():
+        # worker 0 delivers chunk 0 of 2 then the source dries up; workers
+        # 1..3 never say anything
+        payload = {r: _chunk_result(chunked, r, blocks)
+                   for r in chunked.expanded_rows(0, 0)}
+        yield 0.1, 0, 0, payload
+        raise _EventSourceDry("transport gave up")
+
+    with pytest.raises(DecodingError) as ei:
+        _consume_events(chunked, events())
+    msg = str(ei.value)
+    assert "transport gave up" in msg
+    assert "[1, 2, 3] never reported" in msg
+    assert "[0] stalled mid-stream" in msg
+
+
+def test_consume_events_exact_test_gets_last_word_after_dry():
+    """The rank tracker is a float gate: rows it rejects as dependent can
+    still be exactly decodable, and after the source dries up the exact
+    test -- not the tracker -- must have the last word."""
+    from repro.runtime.executor import _EventSourceDry, _consume_events
+
+    # second row is within the tracker's 1e-10 tolerance of the first but
+    # exactly independent: matrix_rank (eps-scale tolerance) sees rank 2
+    M = sp.csr_matrix(np.array([[1.0, 0.0], [1.0, 1e-12]]))
+    code = schemes.CodeInstance(
+        name="toy", M=M, worker_rows=[[0], [1]],
+        cost_factor=np.ones(2), decode_kind="dense")
+    chunked = code.chunked(1)
+
+    def events():
+        yield 0.1, 0, 0, {0: np.ones((2, 2))}
+        yield 0.2, 1, 0, {1: np.ones((2, 2))}
+        raise _EventSourceDry("no more arrivals")
+
+    state = _consume_events(chunked, events())
+    assert state.tracker_rank == 1          # the tracker never filled...
+    assert state.exact_checks == 1          # ...so only the last word ran
+    assert state.pairs == [(0, 0), (1, 0)]
+
+
+def test_live_job_dead_thread_fails_fast_not_timeout():
+    """A worker thread that dies (exception) posts its terminal sentinel:
+    the master stops expecting it instead of waiting out the full timeout."""
+    import time as _time
+
+    from repro.core.decoder import DecodingError
+    from repro.runtime import executor
+
+    m = n = 2
+    A = sp.random(16, 8, density=0.5, format="csc",
+                  random_state=np.random.RandomState(2))
+    B = sp.random(16, 8, density=0.5, format="csc",
+                  random_state=np.random.RandomState(3))
+    code = schemes.uncoded(m, n)  # worker 2 is essential
+
+    real_encode = executor.encode_blocks
+
+    def dying_encode(chunk, A_blocks, B_blocks, n_):
+        if chunk.worker == 2:  # task rows == worker ids for uncoded
+            raise RuntimeError("simulated worker crash")
+        return real_encode(chunk, A_blocks, B_blocks, n_)
+
+    executor.encode_blocks = dying_encode
+    try:
+        t0 = _time.perf_counter()
+        with pytest.raises(DecodingError) as ei:
+            run_live_job(code, split_blocks(A, m), split_blocks(B, n), n,
+                         timeout=30.0)
+        elapsed = _time.perf_counter() - t0
+    finally:
+        executor.encode_blocks = real_encode
+    assert "exited before delivering" in str(ei.value)
+    assert "[2]" in str(ei.value)
+    assert elapsed < 10.0  # sentinel, not the 30s queue timeout
+
+
+def test_live_job_joins_worker_threads_on_early_decode():
+    """Decoding early must not leak straggler threads that keep sleeping or
+    computing in the background (they hold A/B block references alive)."""
+    import threading
+
+    m = n = 2
+    A = sp.random(40, 16, density=0.3, format="csc",
+                  random_state=np.random.RandomState(0))
+    B = sp.random(40, 20, density=0.3, format="csc",
+                  random_state=np.random.RandomState(1))
+    code = schemes.sparse_code(m, n, N=10, seed=4)
+    rep = run_live_job(code, split_blocks(A, m), split_blocks(B, n), n,
+                       straggler_sleep={0: 30.0, 1: 30.0}, num_chunks=2)
+    assert rep.total_time < 10.0
+    leaked = [t.name for t in threading.enumerate()
+              if t.name.startswith("live-worker-") and t.is_alive()]
+    assert leaked == [], f"leaked worker threads: {leaked}"
+
+
+def test_decode_stats_populated_on_host_paths():
+    """Both host paths report the master loop's bookkeeping: arrivals,
+    tracker state, exact-check count, and (empty) fault summary."""
+    m, n, N = 2, 2, 12
+    rng = np.random.default_rng(5)
+    blocks = _blocks(rng, 4)
+    code = schemes.sparse_code(m, n, N, seed=2)
+    rep = run_coded_job(code, blocks, SlowWorkers(num_slow=2, slowdown=8.0),
+                        rng=np.random.default_rng(9), num_chunks=3)
+    for rep_ in (rep,):
+        stats = rep_.decode_stats
+        assert stats["arrivals_consumed"] == rep_.chunks_used > 0
+        assert stats["tracker_rank"] == m * n
+        assert stats["tracker_rows"] >= stats["tracker_rank"]
+        assert stats["exact_checks"] >= 1
+        assert stats["faults"] == {}
+
+    A = sp.random(16, 8, density=0.5, format="csc",
+                  random_state=np.random.RandomState(2))
+    B = sp.random(16, 8, density=0.5, format="csc",
+                  random_state=np.random.RandomState(3))
+    live = run_live_job(code, split_blocks(A, m), split_blocks(B, n), n)
+    stats = live.decode_stats
+    assert stats["arrivals_consumed"] == live.chunks_used > 0
+    assert stats["tracker_rank"] == m * n
+    assert stats["exact_checks"] >= 1
+    assert stats["faults"] == {}
+
+
 def test_run_device_job_single_device_both_backends():
     """The SPMD bridge: run_device_job stages coded_matmul on the default
     (single-device) mesh and returns the decoded product for each backend."""
