@@ -1,0 +1,110 @@
+"""Multi-tenant serving: coded vs uncoded expert FFNs under pool faults.
+
+One Poisson two-tenant trace is served four ways: {coded, uncoded} expert
+jobs x {healthy, slow-worker, killed-worker} pools (uncoded-healthy is the
+baseline; both fault scenarios reuse the same trace).  Both arms use the
+SAME pool size, the same (1, n_blocks) block split of the expert weight
+and the same jit trace -- only the code on the wire differs -- so the p99
+gap is attributable to coding, not to extra hardware.
+
+The paper's serving claim, quantified: with a slow worker the uncoded
+token p99 absorbs the full injected delay while the coded arm decodes
+from the fast prefix; with a killed worker uncoded requests FAIL (SLO
+attainment 0 for affected tokens) while the coded arm completes every
+request exactly, counting straggler recoveries.
+
+Persisted under the ``serving`` key of BENCH_coded_matmul.json (merged,
+read-modify-write -- never clobbers other suites' keys).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, merge_into_bench_json
+
+NUM_WORKERS = 6
+N_BLOCKS = 4          # uncoded uses workers 0..3; coded spreads over all 6
+NUM_CHUNKS = 2
+SLOW_WORKER = {1: 0.15}   # inside the uncoded footprint, so both arms feel it
+DEAD_WORKER = (0,)
+
+
+def _serve(cfg, reqs, *, coded: bool, straggler_sleep=None, dead_workers=()):
+    from repro.serving.engine import ServingEngine
+
+    eng = ServingEngine(
+        cfg, coded=coded, num_workers=NUM_WORKERS, source="live",
+        n_blocks=N_BLOCKS, num_chunks=NUM_CHUNKS,
+        straggler_sleep=straggler_sleep, dead_workers=dead_workers,
+        timeout=20.0, max_batch=3)
+    with eng:
+        # jit compile outside the measured loop: serving p99 is steady state
+        eng.warmup(sorted({r.prompt_len for r in reqs}))
+        return eng.run(reqs).summary()
+
+
+def run(quick: bool = True):
+    from repro.configs import ARCH_REGISTRY
+    from repro.serving import SLO, TenantSpec, poisson_trace
+
+    cfg = ARCH_REGISTRY["qwen3-moe-30b-a3b"].reduced()
+    horizon = 0.25 if quick else 1.0
+    tenants = [
+        TenantSpec("interactive", rate=30.0, prompt_len=6,
+                   max_new_tokens=2 if quick else 4,
+                   slo=SLO(ttft=30.0, per_token=0.12)),
+        TenantSpec("batch", rate=15.0, prompt_len=10,
+                   max_new_tokens=3 if quick else 6,
+                   slo=SLO(ttft=60.0, per_token=1.0)),
+    ]
+
+    def trace():
+        return poisson_trace(tenants, horizon=horizon, seed=11)
+
+    scenarios = [
+        ("healthy", {}),
+        ("slow_worker", {"straggler_sleep": SLOW_WORKER}),
+        ("killed_worker", {"dead_workers": DEAD_WORKER}),
+    ]
+    results = {
+        "num_workers": NUM_WORKERS, "n_blocks": N_BLOCKS,
+        "num_chunks": NUM_CHUNKS, "horizon_s": horizon,
+        "slow_worker_sleep_s": SLOW_WORKER, "dead_workers": list(DEAD_WORKER),
+        "tenants": {t.name: {"rate": t.rate, "max_new_tokens": t.max_new_tokens,
+                             "slo_per_token_s": t.slo.per_token}
+                    for t in tenants},
+        "arms": {},
+    }
+    rows = []
+    for arm in ("coded", "uncoded"):
+        results["arms"][arm] = {}
+        for scen, kw in scenarios:
+            s = _serve(cfg, trace(), coded=(arm == "coded"), **kw)
+            results["arms"][arm][scen] = s
+            p99 = s["token_p99_ms"]
+            rows.append(Row(
+                f"serving/{arm}/{scen}",
+                (p99 or 0.0) * 1e3,  # us per token at p99
+                f"completed={s['completed']}/{s['requests']} "
+                f"slo={s['slo_attainment']:.2f} "
+                f"recoveries={s['straggler_recoveries']}"))
+
+    coded_slow = results["arms"]["coded"]["slow_worker"]
+    uncoded_slow = results["arms"]["uncoded"]["slow_worker"]
+    coded_kill = results["arms"]["coded"]["killed_worker"]
+    uncoded_kill = results["arms"]["uncoded"]["killed_worker"]
+    results["headline"] = {
+        "slow_p99_ratio_uncoded_over_coded": (
+            uncoded_slow["token_p99_ms"] / coded_slow["token_p99_ms"]
+            if coded_slow["token_p99_ms"] else None),
+        "killed_coded_completed": coded_kill["completed"],
+        "killed_uncoded_completed": uncoded_kill["completed"],
+    }
+    rows.append(Row(
+        "serving/headline", 0.0,
+        f"slow p99 uncoded/coded="
+        f"{results['headline']['slow_p99_ratio_uncoded_over_coded']:.2f}x; "
+        f"killed: coded {coded_kill['completed']}/{coded_kill['requests']} vs "
+        f"uncoded {uncoded_kill['completed']}/{uncoded_kill['requests']}"))
+
+    merge_into_bench_json({"serving": results})
+    return rows

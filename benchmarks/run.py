@@ -21,6 +21,7 @@ from benchmarks import (
     bench_decode,
     bench_density,
     bench_recovery,
+    bench_serving,
 )
 
 SUITES = {
@@ -31,6 +32,7 @@ SUITES = {
     "decode": bench_decode,          # Theorem 1
     "coded_matmul": bench_coded_matmul,  # SPMD integration
     "chaos": bench_chaos,            # process runtime vs simulator twin
+    "serving": bench_serving,        # multi-tenant coded serving SLOs
 }
 
 

@@ -62,6 +62,8 @@ class LintConfig:
         "coded/config.py",
         "core/encoder.py",
         "coded/registry.py",
+        "serving/scheduler.py",
+        "serving/loadgen.py",
     )
     hot_path_dirs: tuple[str, ...] = ("runtime", "coded")
     deprecated_module: str = "core/coded_matmul.py"

@@ -77,6 +77,12 @@ class ArchConfig:
     opt_moe_shardmap_combine: bool = False  # hand-written shard_map MoE
     #   combine: sum each expert shard's contributions locally, psum ONE
     #   (Tl, d) bf16 tensor (vs GSPMD's (Tl*k, d) f32 gather-AR)
+    opt_coded_moe: bool = False        # coded expert FFN matmuls: every MoE
+    #   expert product is encoded over `coded_moe_workers` redundant workers
+    #   with the scheme in `coded` and decoded linearly, so generation
+    #   tolerates dead/slow expert shards (models/moe.py, DESIGN.md s.11)
+    coded_moe_workers: int = 0         # workers for the expert code; 0 ->
+    #   num_experts + 2 (two redundant rows, the paper's minimal slack)
     # ---- coded-matmul deployment (repro.coded) --------------------------------
     # `coded` is the authoritative execution config for the coded matmul
     # device path (scheme, backend, decode layout, ...), validated at
@@ -115,7 +121,7 @@ class ArchConfig:
     def with_opts(self, names) -> "ArchConfig":
         valid = {"fused_ce", "moe_local_dispatch", "onehot_cache",
                  "serving_layout", "seq_parallel", "remat_save_tp",
-                 "moe_shardmap_combine"}
+                 "moe_shardmap_combine", "coded_moe"}
         kw = {}
         for nm in names:
             if nm not in valid:

@@ -15,8 +15,13 @@ examples/ applies the sparse code over expert shards.
 
 from __future__ import annotations
 
+import contextlib
+import functools
+import threading
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.launch.meshctx import maybe_shard
 from repro.models.layers import ParamDef, activation
@@ -31,6 +36,90 @@ def moe_defs(cfg) -> dict:
         "w_up": ParamDef((E, d, ff), spec=("model", "data", None)),
         "w_down": ParamDef((E, ff, d), spec=("model", None, "data")),
     }
+
+
+# ---------------------- coded expert FFN (repro.coded) ----------------------
+#
+# The paper's code, applied over the EXPERT axis: the E per-expert products
+# of one FFN matmul are the mn unknowns (m=E, n=1), encoded into
+# N = coded_moe_workers weighted combinations C~_k = sum_e M[k,e] * (buf_e W_e)
+# -- each a "worker" output, sharded over 'model' exactly like the plain
+# expert dimension -- and decoded linearly with D = pinv(M).  Any full-rank
+# survivor subset reconstructs every expert's product, so a dead or slow
+# expert shard costs redundancy, not correctness.  The generator and decode
+# matrices come from the SAME scheme registry as every other coded path
+# (`repro.coded.plan`), so host jobs, device ops, and the MoE share one
+# design per (scheme, E, N, seed).
+
+_CODED_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def coded_moe_decode(D):
+    """Override the decode matrix coded expert FFNs use (trace-time hook).
+
+    ``D`` is an (E, N) array -- typically
+    ``coded_moe_decode_matrix(cfg, survivors)`` -- and may be a traced jit
+    argument: the serving engine passes the current survivor-rebound decode
+    into its jitted step so worker death re-routes decoding WITHOUT a
+    retrace (shapes are survivor-independent; dead workers are zero
+    columns).  Without the context the full-survivor decode constant is
+    baked in and generation works standalone.
+    """
+    prev = getattr(_CODED_CTX, "D", None)
+    _CODED_CTX.D = D
+    try:
+        yield
+    finally:
+        _CODED_CTX.D = prev
+
+
+def coded_moe_num_workers(cfg) -> int:
+    """N for the expert code: ``coded_moe_workers`` or E + 2."""
+    n = int(getattr(cfg, "coded_moe_workers", 0) or 0)
+    return n if n > 0 else cfg.moe.num_experts + 2
+
+
+@functools.lru_cache(maxsize=32)
+def _coded_moe_op(scheme: str, E: int, N: int, seed: int = 0):
+    """The cached CodedOp designing the (m=E, n=1) expert code."""
+    from repro.coded import CodedMatmulConfig, plan
+
+    return plan(CodedMatmulConfig(scheme=scheme), m=E, n=1, num_workers=N,
+                seed=seed)
+
+
+def coded_moe_decode_matrix(cfg, survivors=None) -> np.ndarray:
+    """(E, N) f32 decode matrix for the expert code, survivor-rebound.
+
+    ``survivors``: optional (N,) liveness mask; dead workers become zero
+    columns (the pseudo-inverse of the mask-zeroed generator), so the
+    matrix shape never changes and a jitted step can take it as a plain
+    argument.  Raises ``DecodingError`` when the survivors lose rank --
+    eagerly, on the host, before any device step runs with a bad decode.
+    """
+    op = _coded_moe_op(cfg.coded.scheme, cfg.moe.num_experts,
+                       coded_moe_num_workers(cfg))
+    if survivors is not None:
+        op = op.with_survivors(np.asarray(survivors, dtype=bool))
+    return np.asarray(op.plan_.decode, dtype=np.float32)
+
+
+def _coded_expert_mm(x_e, W, eq: str, cfg):
+    """One expert-batched matmul through the code: encode N worker
+    combinations, shard them over 'model', decode back to per-expert."""
+    op = _coded_moe_op(cfg.coded.scheme, cfg.moe.num_experts,
+                       coded_moe_num_workers(cfg))
+    enc = jnp.asarray(
+        op.base_plan.coefficient_matrix().astype(np.float32))  # (N, E)
+    D = getattr(_CODED_CTX, "D", None)
+    if D is None:
+        D = jnp.asarray(np.asarray(op.base_plan.decode, np.float32))
+    prod = jnp.einsum(eq, x_e, W).astype(jnp.float32)    # (E, C, F)
+    y = jnp.einsum("ke,ecf->kcf", enc, prod)             # worker outputs
+    y = maybe_shard(y, "model", None, None)
+    dec = jnp.einsum("ek,kcf->ecf", jnp.asarray(D, jnp.float32), y)
+    return dec.astype(x_e.dtype)
 
 
 def moe_apply(x, p, cfg):
@@ -74,10 +163,17 @@ def moe_apply(x, p, cfg):
     buf = buf.at[se, pos].add(jnp.where(keep[:, None], xt[st], 0))
     buf = maybe_shard(buf, "model", None, None)
 
-    h = activation(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]), "silu")
-    h = h * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
-    h = maybe_shard(h, "model", None, None)
-    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    if getattr(cfg, "opt_coded_moe", False):
+        h = activation(_coded_expert_mm(buf, p["w_gate"], "ecd,edf->ecf", cfg),
+                       "silu")
+        h = h * _coded_expert_mm(buf, p["w_up"], "ecd,edf->ecf", cfg)
+        h = maybe_shard(h, "model", None, None)
+        out_buf = _coded_expert_mm(h, p["w_down"], "ecf,efd->ecd", cfg)
+    else:
+        h = activation(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]), "silu")
+        h = h * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+        h = maybe_shard(h, "model", None, None)
+        out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
     out_buf = maybe_shard(out_buf, "model", None, None)
 
     # unpack: gather each (token, choice) result and weighted-sum into tokens

@@ -10,6 +10,9 @@ from repro.runtime.straggler import (
 )
 from repro.runtime.executor import (
     ExecutionReport,
+    JobMux,
+    MuxJob,
+    MuxResult,
     run_coded_job,
     run_device_job,
     run_live_job,
@@ -27,6 +30,9 @@ __all__ = [
     "ExponentialStragglers",
     "ShiftedExponential",
     "ExecutionReport",
+    "JobMux",
+    "MuxJob",
+    "MuxResult",
     "FaultLedger",
     "FaultPlan",
     "FaultRealization",

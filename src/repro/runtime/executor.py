@@ -48,6 +48,7 @@ Four entry points share that loop or wrap the device path:
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import queue
 import threading
 import time
@@ -123,67 +124,129 @@ class _MasterState:
         }
 
 
+@dataclasses.dataclass
+class _JobProgress:
+    """Per-job master state while the job is still in flight."""
+
+    chunked: ChunkedCode
+    tracker: IncrementalRankTracker
+    progress: np.ndarray
+    results_by_row: dict[int, object]
+    pairs: list[tuple[int, int]]
+    last_time: float = 0.0
+    exact_checks: int = 0
+
+    @classmethod
+    def fresh(cls, chunked: ChunkedCode) -> "_JobProgress":
+        return cls(chunked=chunked,
+                   tracker=IncrementalRankTracker(chunked.mn),
+                   progress=np.zeros(chunked.num_workers, dtype=np.int64),
+                   results_by_row={}, pairs=[])
+
+    def to_state(self, stop_time: float) -> _MasterState:
+        return _MasterState(
+            pairs=self.pairs, progress=self.progress,
+            results_by_row=self.results_by_row, stop_time=stop_time,
+            exact_checks=self.exact_checks,
+            tracker_rows=self.tracker.rows_seen,
+            tracker_rank=self.tracker.rank)
+
+
+def _consume_mux_events(
+    jobs: dict[int, ChunkedCode],
+    events: Iterator[tuple[float, int, int, int, dict[int, object]]],
+    job_done=None,
+) -> tuple[dict[int, _MasterState], dict[int, str]]:
+    """THE master loop, job-multiplexed: many jobs, one arrival stream.
+
+    Each event is ``(time, worker, job, chunk, payload)`` with ``payload``
+    mapping expanded-M row ids (of that job's code) to blocks; chunks of
+    one (worker, job) stream must arrive in order.  Per event, that job's
+    rank tracker folds in the new rows; the exact (scheme-specific)
+    decodability test runs only once its tracker reports full rank.  A job
+    that decodes stops consuming immediately (first-decodable-prefix early
+    stop, per job) and ``job_done(jid)`` tells the source to cancel its
+    not-yet-started chunks -- other jobs keep draining.  Arrivals for
+    finished or unknown jobs (late chunks of a cancelled job, leftovers of
+    a previous batch on a persistent pool) are skipped, not errors.
+
+    Returns ``(states, failures)``: decodable jobs' ``_MasterState`` and,
+    for jobs that never became decodable, the reason string -- one bad job
+    (say, an uncoded job whose worker died) cannot fail the batch.
+    """
+    live = {jid: _JobProgress.fresh(chunked) for jid, chunked in jobs.items()}
+    states: dict[int, _MasterState] = {}
+    failures: dict[int, str] = {}
+    dry_reason: str | None = None
+    try:
+        for t, w, jid, c, payload in events:
+            jp = live.get(jid)
+            if jp is None:  # finished job's late chunk / stale batch leftover
+                continue
+            if c != jp.progress[w]:
+                raise ValueError(
+                    f"worker {w} delivered chunk {c} out of order "
+                    f"(expected {jp.progress[w]}): sub-task streams are ordered")
+            jp.progress[w] += 1
+            jp.pairs.append((w, c))
+            jp.last_time = t
+            for r, blk in payload.items():
+                jp.results_by_row[r] = blk
+                jp.tracker.add(np.asarray(jp.chunked.M[r].todense()))
+            if jp.tracker.is_full:
+                jp.exact_checks += 1
+                if jp.chunked.can_decode(jp.pairs):
+                    states[jid] = jp.to_state(stop_time=t)
+                    del live[jid]
+                    if job_done is not None:
+                        job_done(jid)
+                    if not live:
+                        break
+    except _EventSourceDry as dry:
+        dry_reason = dry.reason
+    # events exhausted (or the source dried up): the tracker is a float
+    # gate, so give the exact test the last word before declaring failure
+    for jid, jp in live.items():
+        jp.exact_checks += 1
+        if jp.chunked.can_decode(jp.pairs):
+            states[jid] = jp.to_state(stop_time=jp.last_time)
+            continue
+        if dry_reason is None:
+            failures[jid] = (f"{jp.chunked.name}: not decodable even with all "
+                             f"{jp.chunked.num_workers} workers' chunks")
+        else:
+            never = np.flatnonzero(jp.progress == 0).tolist()
+            stalled = np.flatnonzero(
+                (jp.progress > 0)
+                & (jp.progress < jp.chunked.num_chunks)).tolist()
+            failures[jid] = (
+                f"{jp.chunked.name}: {dry_reason}; workers {never} never "
+                f"reported" + (f", workers {stalled} stalled mid-stream"
+                               if stalled else ""))
+    return states, failures
+
+
 def _consume_events(
     chunked: ChunkedCode,
     events: Iterator[tuple[float, int, int, dict[int, object]]],
 ) -> _MasterState:
-    """THE master loop: drain arrivals until the collected chunks decode.
+    """Single-job master loop: the one-job view of ``_consume_mux_events``.
 
-    Simulation and live threads are just event sources feeding this --
-    there is one protocol, not two.  Each event is
-    ``(time, worker, chunk, payload)`` with ``payload`` mapping expanded-M
-    row ids to blocks; chunks of one worker must arrive in order (ordered
-    sub-task streams).  Per event the rank tracker folds in the new rows;
-    the exact (scheme-specific) decodability test runs only once the
-    tracker reports full rank -- and again per event after that for
-    peel-decoded schemes, whose decodability is stricter than rank.
+    Simulation, live threads, and subprocess pools are just event sources
+    feeding this -- there is one protocol, not two.  Each event is
+    ``(time, worker, chunk, payload)``; see ``_consume_mux_events`` for the
+    loop's semantics (rank-tracker gating, exact-test last word).  Raises
+    ``DecodingError`` with the job's failure reason when the collected
+    chunks never decode.
     """
-    tracker = IncrementalRankTracker(chunked.mn)
-    progress = np.zeros(chunked.num_workers, dtype=np.int64)
-    results_by_row: dict[int, object] = {}
-    pairs: list[tuple[int, int]] = []
-    last_time = 0.0
-    exact_checks = 0
-    why = (f"{chunked.name}: not decodable even with all "
-           f"{chunked.num_workers} workers' chunks")
-    try:
+    def tagged():
         for t, w, c, payload in events:
-            if c != progress[w]:
-                raise ValueError(
-                    f"worker {w} delivered chunk {c} out of order "
-                    f"(expected {progress[w]}): sub-task streams are ordered")
-            progress[w] += 1
-            pairs.append((w, c))
-            last_time = t
-            for r, blk in payload.items():
-                results_by_row[r] = blk
-                tracker.add(np.asarray(chunked.M[r].todense()))
-            if tracker.is_full:
-                exact_checks += 1
-                if chunked.can_decode(pairs):
-                    return _MasterState(
-                        pairs=pairs, progress=progress,
-                        results_by_row=results_by_row, stop_time=t,
-                        exact_checks=exact_checks,
-                        tracker_rows=tracker.rows_seen,
-                        tracker_rank=tracker.rank)
-    except _EventSourceDry as dry:
-        never = np.flatnonzero(progress == 0).tolist()
-        stalled = np.flatnonzero(
-            (progress > 0) & (progress < chunked.num_chunks)).tolist()
-        why = (f"{chunked.name}: {dry.reason}; workers {never} never "
-               f"reported" + (f", workers {stalled} stalled mid-stream"
-                              if stalled else ""))
-    # events exhausted (or the source dried up): the tracker is a float
-    # gate, so give the exact test the last word before declaring failure
-    exact_checks += 1
-    if chunked.can_decode(pairs):
-        return _MasterState(pairs=pairs, progress=progress,
-                            results_by_row=results_by_row, stop_time=last_time,
-                            exact_checks=exact_checks,
-                            tracker_rows=tracker.rows_seen,
-                            tracker_rank=tracker.rank)
-    raise DecodingError(why)
+            yield t, w, 0, c, payload
+
+    states, failures = _consume_mux_events({0: chunked}, tagged())
+    if 0 in states:
+        return states[0]
+    raise DecodingError(failures[0])
 
 
 # ------------------------------ event sources -------------------------------
@@ -262,6 +325,395 @@ def _live_events(
         raise _EventSourceDry(
             f"worker thread(s) {sorted(set(exited_early))} exited before "
             "delivering all chunks")
+
+
+# ------------------------------ job multiplexer -----------------------------
+
+@dataclasses.dataclass
+class MuxJob:
+    """One coded matmul job submitted to a ``JobMux`` pool.
+
+    ``A_blocks``/``B_blocks`` are the column blocks of A and B (the job is
+    C = A^T B over an (m, n) block grid, exactly as in ``run_live_job``);
+    ``code.num_workers`` may be <= the pool size -- the job runs on the
+    pool's first ``num_workers`` workers and leaves the rest to other jobs.
+    ``tag`` is the caller's correlation key (e.g. a request id) and is
+    echoed on the ``MuxResult``.
+    """
+
+    code: CodeInstance
+    A_blocks: Sequence
+    B_blocks: Sequence
+    n: int
+    num_chunks: int = 1
+    tag: object = None
+
+
+@dataclasses.dataclass
+class MuxResult:
+    """Outcome of one ``MuxJob``: a per-job report or a failure reason."""
+
+    tag: object
+    report: ExecutionReport | None
+    error: str | None = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
+
+    @property
+    def blocks(self):
+        return self.report.blocks if self.report is not None else None
+
+
+class _LazyTrueBlocks:
+    """``blocks_true[i*n+j] = A_i^T B_j``, materialized on first touch so
+    simulation cost tracks blocks actually referenced by consumed events."""
+
+    def __init__(self, A_blocks: Sequence, B_blocks: Sequence, n: int):
+        self._A, self._B, self._n = A_blocks, B_blocks, n
+        self._cache: dict[int, object] = {}
+
+    def __len__(self) -> int:
+        return len(self._A) * self._n
+
+    def __getitem__(self, k: int):
+        out = self._cache.get(k)
+        if out is None:
+            i, j = divmod(k, self._n)
+            out = self._cache[k] = self._A[i].T @ self._B[j]
+        return out
+
+
+def _fair_worker_items(
+    chunkeds: dict[int, ChunkedCode], worker: int,
+) -> list[tuple[int, int]]:
+    """Chunk-major round-robin schedule for one worker: chunk 0 of every
+    job (in submission order), then chunk 1 of every job, ...  No job's
+    second chunk is computed before every job got its first -- the fairness
+    policy that keeps one huge job from starving small ones."""
+    jids = [jid for jid, ch in chunkeds.items() if worker < ch.num_workers]
+    if not jids:
+        return []
+    maxq = max(chunkeds[jid].num_chunks for jid in jids)
+    return [(jid, c) for c in range(maxq) for jid in jids
+            if c < chunkeds[jid].num_chunks]
+
+
+class _MuxSimSource:
+    """Discrete-event simulation of one worker pool serving many jobs.
+
+    Each worker is a rate-r server draining its fair chunk-major item queue
+    in order; the straggler realization (one draw at pool construction, so
+    the same worker stays slow across batches) sets the rates.  A job the
+    master finished is cancelled: its not-yet-started items are skipped for
+    free, its in-flight items complete (the worker already spent that time)
+    and arrive as discarded late chunks.
+    """
+
+    def __init__(self, num_workers: int, straggler=None,
+                 rng: np.random.Generator | None = None,
+                 unit_block_time: float = 1.0,
+                 dead_workers: Sequence[int] = ()):
+        rng = rng or np.random.default_rng(0)
+        base = np.ones(num_workers, dtype=np.float64)
+        times = (straggler.completion_times(base, rng)
+                 if straggler is not None else base)
+        self.rates = 1.0 / np.asarray(times, dtype=np.float64)
+        self.rates[list(dead_workers)] = 0.0
+        self.num_workers = num_workers
+        self.unit_block_time = unit_block_time
+        self._done: set[int] = set()
+
+    def start(self) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+    def job_done(self, jid: int) -> None:
+        self._done.add(jid)
+
+    def submit(self, chunkeds: dict[int, ChunkedCode],
+               jobs: dict[int, MuxJob]):
+        truth = {jid: _LazyTrueBlocks(j.A_blocks, j.B_blocks, j.n)
+                 for jid, j in jobs.items()}
+        work = {jid: ch.chunk_work() * self.unit_block_time
+                for jid, ch in chunkeds.items()}
+        return self._events(chunkeds, truth, work)
+
+    def _events(self, chunkeds, truth, work):
+        items = {w: _fair_worker_items(chunkeds, w)
+                 for w in range(self.num_workers) if self.rates[w] > 0}
+        heap: list[tuple[float, int, int, int, int]] = []
+        ptr = {w: 0 for w in items}
+        clock = {w: 0.0 for w in items}
+        seq = 0
+
+        def schedule(w: int) -> None:
+            nonlocal seq
+            while ptr[w] < len(items[w]):
+                jid, c = items[w][ptr[w]]
+                ptr[w] += 1
+                if jid in self._done:  # cancelled before start: free skip
+                    continue
+                clock[w] += work[jid][w, c] / self.rates[w]
+                heapq.heappush(heap, (clock[w], seq, w, jid, c))
+                seq += 1
+                return
+
+        for w in items:
+            schedule(w)
+        while heap:
+            t, _, w, jid, c = heapq.heappop(heap)
+            if jid not in self._done:  # in-flight at cancel -> discard late
+                ch = chunkeds[jid]
+                payload = {r: _chunk_result(ch, r, truth[jid])
+                           for r in ch.expanded_rows(w, c)}
+                yield t, w, jid, c, payload
+            schedule(w)
+
+
+class _MuxLiveSource:
+    """One persistent pool of worker threads serving batch after batch.
+
+    Threads are spawned once (``start``) and park on a condition variable
+    between batches; ``submit`` publishes a new epoch with per-worker fair
+    item queues.  Workers check the shared done-set before every item, so a
+    job the master finished stops costing compute mid-batch.  Workers in
+    ``dead_workers`` are never spawned -- the pool-level analogue of a
+    worker killed at t=0 -- and the batch's event stream ends by naming
+    them, so per-job failures report who never showed up.
+    """
+
+    def __init__(self, num_workers: int,
+                 straggler_sleep: dict[int, float] | None = None,
+                 dead_workers: Sequence[int] = (),
+                 timeout: float = 60.0):
+        self.num_workers = num_workers
+        self.straggler_sleep = straggler_sleep or {}
+        self.dead = sorted(set(int(w) for w in dead_workers))
+        self.timeout = timeout
+        self._q: queue.Queue = queue.Queue()
+        self._stop = threading.Event()
+        self._cv = threading.Condition()
+        self._epoch = 0
+        self._batch: tuple[dict, dict] | None = None  # (items_by_worker, jobdata)
+        self._done: set[int] = set()
+        self._threads: list[threading.Thread] = []
+
+    def start(self) -> None:
+        if self._threads:
+            return
+        self._threads = [
+            threading.Thread(target=self._worker_fn, args=(w,), daemon=True,
+                             name=f"mux-worker-{w}")
+            for w in range(self.num_workers) if w not in self.dead]
+        for t in self._threads:
+            t.start()
+
+    def close(self) -> None:
+        self._stop.set()
+        with self._cv:
+            self._cv.notify_all()
+        join_deadline = time.perf_counter() + 5.0
+        for t in self._threads:
+            t.join(timeout=max(0.0, join_deadline - time.perf_counter()))
+        self._threads = []
+
+    def job_done(self, jid: int) -> None:
+        self._done.add(jid)
+
+    def submit(self, chunkeds: dict[int, ChunkedCode],
+               jobs: dict[int, MuxJob]):
+        items = {w: _fair_worker_items(chunkeds, w)
+                 for w in range(self.num_workers)}
+        jobdata = {}
+        for jid, job in jobs.items():
+            tasks_by_row = {t.worker: t for t in make_tasks(job.code.M)}
+            jobdata[jid] = (job, tasks_by_row, chunkeds[jid].num_chunks)
+        with self._cv:
+            self._epoch += 1
+            self._batch = (items, jobdata)
+            epoch = self._epoch
+            self._cv.notify_all()
+        return self._events(epoch)
+
+    def _worker_fn(self, w: int) -> None:
+        last_seen = 0
+        while True:
+            with self._cv:
+                self._cv.wait_for(
+                    lambda: self._stop.is_set() or self._epoch > last_seen)
+                if self._stop.is_set():
+                    return
+                last_seen = self._epoch
+                items, jobdata = self._batch
+            my_items = items.get(w, [])
+            row_chunks: dict[int, dict] = {}  # jid -> {row: chunks}
+            try:
+                for jid, c in my_items:
+                    if self._stop.is_set():
+                        return
+                    if jid in self._done:
+                        continue
+                    job, tasks_by_row, q = jobdata[jid]
+                    if jid not in row_chunks:
+                        row_chunks[jid] = {r: tasks_by_row[r].chunks(q)
+                                           for r in job.code.worker_rows[w]}
+                    delay = self.straggler_sleep.get(w, 0.0) / q
+                    if delay and self._stop.wait(delay):  # interruptible
+                        return
+                    payload = {}
+                    for r, chunks in row_chunks[jid].items():
+                        out = encode_blocks(chunks[c], job.A_blocks,
+                                            job.B_blocks, job.n)
+                        if out is not None:
+                            payload[r * q + c] = out
+                    self._q.put(("chunk", last_seen, w, jid, c, payload))
+            except Exception:
+                pass  # the fin below tells the master w is done with the batch
+            finally:
+                self._q.put(("fin", last_seen, w, None, None, None))
+
+    def _events(self, epoch: int):
+        t0 = time.perf_counter()
+        fins: set[int] = set()
+        expected = self.num_workers - len(self.dead)
+        while len(fins) < expected:
+            try:
+                kind, ep, w, jid, c, payload = self._q.get(
+                    timeout=self.timeout)
+            except queue.Empty:
+                raise _EventSourceDry(
+                    f"no worker result within {self.timeout:.1f}s and the "
+                    "collected chunks do not decode (hung or dead workers?)"
+                ) from None
+            if ep != epoch:  # leftover of a previous batch: drop
+                continue
+            if kind == "fin":
+                fins.add(w)
+                continue
+            yield time.perf_counter() - t0, w, jid, c, payload
+        if self.dead:
+            raise _EventSourceDry(
+                f"worker(s) {self.dead} dead for the whole batch")
+
+
+class JobMux:
+    """Many concurrent coded jobs multiplexed over ONE worker pool.
+
+    The pool is persistent: construct once (picking the event source --
+    ``"sim"`` for the rate-based discrete-event simulation, ``"live"`` for
+    real threads with injected sleeps; subprocess pools plug in via
+    ``runtime.procpool.MuxProcPool``), then call :meth:`run` per batch of
+    jobs.  Every batch shares the workers fairly (chunk-major round-robin
+    across jobs), tracks decodability per job with its own
+    ``IncrementalRankTracker``, stops each job at its first decodable
+    chunk prefix, and cancels that job's remaining chunks so the pool's
+    capacity flows to the jobs still in flight.  One undecodable job fails
+    alone (``MuxResult.error``); the rest of the batch decodes.
+
+    This is the serving building block: ``repro.serving.engine`` submits
+    one expert-FFN job per in-flight request per token step, all against
+    the same pool and one shared pack cache.
+    """
+
+    def __init__(self, num_workers: int, *, source: str = "sim",
+                 straggler=None, rng: np.random.Generator | None = None,
+                 unit_block_time: float = 1.0,
+                 straggler_sleep: dict[int, float] | None = None,
+                 dead_workers: Sequence[int] = (),
+                 timeout: float = 60.0):
+        self.num_workers = num_workers
+        if source == "sim":
+            self._source = _MuxSimSource(
+                num_workers, straggler=straggler, rng=rng,
+                unit_block_time=unit_block_time, dead_workers=dead_workers)
+        elif source == "live":
+            self._source = _MuxLiveSource(
+                num_workers, straggler_sleep=straggler_sleep,
+                dead_workers=dead_workers, timeout=timeout)
+        elif hasattr(source, "submit") and hasattr(source, "job_done"):
+            # a source object (e.g. runtime.procpool.MuxProcPool): real OS
+            # subprocess workers behind the same submit/job_done protocol
+            self._source = source
+        else:
+            raise ValueError(f"unknown JobMux source {source!r}; expected "
+                             "'sim', 'live', or a source object like "
+                             "runtime.procpool.MuxProcPool")
+        self._next_jid = 0
+        self._started = False
+
+    # sources with real resources (threads, processes) need start/close;
+    # the context-manager form is the one callers should reach for
+    def start(self) -> "JobMux":
+        if not self._started:
+            self._source.start()
+            self._started = True
+        return self
+
+    def close(self) -> None:
+        if self._started:
+            self._source.close()
+            self._started = False
+
+    def __enter__(self) -> "JobMux":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def run(self, jobs: Sequence[MuxJob],
+            raise_on_error: bool = False) -> list[MuxResult]:
+        """Run one batch of concurrent jobs to per-job exact decode."""
+        self.start()
+        for job in jobs:
+            if job.code.num_workers > self.num_workers:
+                raise ValueError(
+                    f"job {job.tag!r} wants {job.code.num_workers} workers "
+                    f"but the pool has {self.num_workers}")
+        jids = list(range(self._next_jid, self._next_jid + len(jobs)))
+        self._next_jid += len(jobs)
+        by_jid = dict(zip(jids, jobs))
+        chunkeds = {jid: job.code.chunked(job.num_chunks)
+                    for jid, job in by_jid.items()}
+        events = self._source.submit(chunkeds, by_jid)
+        states, failures = _consume_mux_events(
+            chunkeds, events, job_done=self._source.job_done)
+
+        from repro.runtime import pack_cache
+
+        results = []
+        for jid in jids:
+            job = by_jid[jid]
+            if jid in failures:
+                if raise_on_error:
+                    raise DecodingError(failures[jid])
+                results.append(MuxResult(tag=job.tag, report=None,
+                                         error=failures[jid]))
+                continue
+            state = states[jid]
+            chunked = chunkeds[jid]
+            t0 = time.perf_counter()
+            blocks = chunked.decode(state.pairs, state.results_by_row)
+            decode_time = time.perf_counter() - t0
+            stats = state.decode_stats()
+            stats["concurrent_jobs"] = len(jobs)
+            stats["pack_cache"] = pack_cache.cache_stats()
+            results.append(MuxResult(tag=job.tag, report=ExecutionReport(
+                scheme=chunked.name,
+                workers_used=int((state.progress > 0).sum()),
+                num_workers=job.code.num_workers,
+                sim_compute_time=float(state.stop_time),
+                decode_wall_time=decode_time,
+                total_time=float(state.stop_time) + decode_time,
+                decode_stats=stats,
+                blocks=blocks,
+                num_chunks=job.num_chunks,
+                chunks_used=len(state.pairs),
+            )))
+        return results
 
 
 # ------------------------------- entry points -------------------------------
@@ -476,6 +928,8 @@ def run_device_job(
         times.append(time.perf_counter() - t0)
     elapsed = float(np.median(times))
 
+    from repro.runtime import pack_cache
+
     used = (int(op.survivors.sum()) if op.survivors is not None
             else plan.num_workers)
     return ExecutionReport(
@@ -486,6 +940,7 @@ def run_device_job(
         decode_wall_time=0.0,
         total_time=elapsed,
         decode_stats={"backend": backend, "max_degree": plan.max_degree,
-                      "on_device_decode": True, "out_sharded": out_sharded},
+                      "on_device_decode": True, "out_sharded": out_sharded,
+                      "pack_cache": pack_cache.cache_stats()},
         blocks=[np.asarray(result)],
     )

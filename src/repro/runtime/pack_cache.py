@@ -14,7 +14,11 @@ recycled while its entry is resident.
 The runtime layer owns this cache (not core): core stays a pure library.
 The consumer is ``repro.coded.CodedOp`` -- ``op.pack_for(ell)`` (and
 therefore ``op.apply(..., a_sparse=ell)``) consults it keyed on the op's
-BASE plan, so survivor rebinds of the same op share one pack.
+BASE plan, so survivor rebinds of the same op share one pack.  The cache is
+a ``PackCache`` object with hit/miss/eviction counters; the module-level
+functions operate on the process-wide default instance (``GLOBAL``), whose
+``stats()`` snapshot rides along in ``ExecutionReport.decode_stats`` so
+multi-job cache sharing is auditable from any report.
 """
 
 from __future__ import annotations
@@ -26,36 +30,58 @@ from repro.sparse.blocksparse import BlockELL
 
 _MAX_ENTRIES = 16
 
-# key -> (ell, plan, pack): the ell/plan refs pin the ids the key is built from
-_cache: OrderedDict[tuple[int, int], tuple[BlockELL, CodedMatmulPlan, WorkerTilePack]]
-_cache = OrderedDict()
-_hits = 0
-_misses = 0
+
+class PackCache:
+    """Identity-keyed LRU of (BlockELL, plan) -> WorkerTilePack with counters."""
+
+    def __init__(self, max_entries: int = _MAX_ENTRIES):
+        self.max_entries = max_entries
+        # key -> (ell, plan, pack): the refs pin the ids the key is built from
+        self._cache: OrderedDict[
+            tuple[int, int], tuple[BlockELL, CodedMatmulPlan, WorkerTilePack]]
+        self._cache = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get_pack(self, ell: BlockELL, plan: CodedMatmulPlan) -> WorkerTilePack:
+        """The pack for (ell, plan), computed at most once while both are alive."""
+        key = (id(ell), id(plan))
+        hit = self._cache.get(key)
+        if hit is not None:
+            self._cache.move_to_end(key)
+            self.hits += 1
+            return hit[2]
+        pack = pack_worker_tiles(ell, plan)
+        self._cache[key] = (ell, plan, pack)
+        if len(self._cache) > self.max_entries:
+            self._cache.popitem(last=False)
+            self.evictions += 1
+        self.misses += 1
+        return pack
+
+    def stats(self) -> dict:
+        return {"entries": len(self._cache), "hits": self.hits,
+                "misses": self.misses, "evictions": self.evictions}
+
+    def clear(self) -> None:
+        self._cache.clear()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+
+#: the process-wide cache every ``CodedOp`` (and so every job) shares
+GLOBAL = PackCache()
 
 
 def get_pack(ell: BlockELL, plan: CodedMatmulPlan) -> WorkerTilePack:
-    """The pack for (ell, plan), computed at most once while both are alive."""
-    global _hits, _misses
-    key = (id(ell), id(plan))
-    hit = _cache.get(key)
-    if hit is not None:
-        _cache.move_to_end(key)
-        _hits += 1
-        return hit[2]
-    pack = pack_worker_tiles(ell, plan)
-    _cache[key] = (ell, plan, pack)
-    if len(_cache) > _MAX_ENTRIES:
-        _cache.popitem(last=False)
-    _misses += 1
-    return pack
+    return GLOBAL.get_pack(ell, plan)
 
 
 def cache_stats() -> dict:
-    return {"entries": len(_cache), "hits": _hits, "misses": _misses}
+    return GLOBAL.stats()
 
 
 def clear() -> None:
-    global _hits, _misses
-    _cache.clear()
-    _hits = 0
-    _misses = 0
+    GLOBAL.clear()

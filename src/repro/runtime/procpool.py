@@ -346,6 +346,225 @@ class ProcPool:
         return list(self.ledger.entries)
 
 
+# --------------------------- job-multiplexed pool ---------------------------
+
+def _mux_worker_main(worker, conn, sleep_per_chunk):
+    """Persistent mux subprocess (spawn target; must stay module-level).
+
+    Serves batch after batch over one duplex pipe.  Wire format:
+    master -> worker ``("batch", epoch, items, jobdata)`` with ``items`` a
+    fair ``[(jid, chunk)]`` schedule and ``jobdata[jid] = (row_chunks,
+    A_blocks, B_blocks, n, q)``; ``("job_done", jid)`` cancels a job's
+    not-yet-started chunks (the worker drains control messages before every
+    item); ``("stop",)`` ends the process.  worker -> master ``("hello", w,
+    pid)`` once, ``("chunk", w, epoch, jid, c, payload)`` per result in
+    order, ``("fin", w, epoch)`` when its batch schedule is drained.  Pipe
+    EOF without a fin is a crash, whatever the exit code says.
+    """
+    try:
+        conn.send(("hello", worker, os.getpid()))
+    except (BrokenPipeError, OSError):
+        return
+    done = set()
+    try:
+        while True:
+            try:
+                msg = conn.recv()
+            except (EOFError, OSError):
+                return
+            if msg[0] == "stop":
+                return
+            if msg[0] == "job_done":
+                done.add(msg[1])
+                continue
+            _, epoch, items, jobdata = msg
+            for jid, c in items:
+                while conn.poll():  # control messages preempt the schedule
+                    m2 = conn.recv()
+                    if m2[0] == "stop":
+                        return
+                    if m2[0] == "job_done":
+                        done.add(m2[1])
+                if jid in done:
+                    continue
+                row_chunks, A_blocks, B_blocks, n, q = jobdata[jid]
+                if sleep_per_chunk:
+                    time.sleep(sleep_per_chunk / q)
+                payload = {}
+                for r, chunks in row_chunks.items():
+                    out = encode_blocks(chunks[c], A_blocks, B_blocks, n)
+                    if out is not None:
+                        payload[r * q + c] = out
+                conn.send(("chunk", worker, epoch, jid, c, payload))
+            conn.send(("fin", worker, epoch))
+    except (BrokenPipeError, OSError):
+        return  # master went away: nothing left to report to
+    finally:
+        conn.close()
+
+
+class MuxProcPool:
+    """``JobMux`` event source over persistent OS subprocess workers.
+
+    The third mux transport after ``_MuxSimSource`` and ``_MuxLiveSource``:
+    construct a ``JobMux``-compatible source whose workers are real
+    processes spawned ONCE and reused batch after batch (pass the instance
+    as ``JobMux(num_workers, source=pool)``).  Faults are real: a
+    ``runtime.chaos`` plan
+    SIGKILLs or throttles live pids (``kill.after_chunk`` counts the
+    worker's per-job chunk index of the arrival that triggers it), crashes
+    surface as pipe EOF and land in ``self.ledger``, and later batches
+    simply stop scheduling the dead worker -- coded jobs keep decoding,
+    uncoded jobs that needed it fail alone.  Hangs are covered by the batch
+    ``timeout`` (this pool has no heartbeat thread; use ``ProcPool`` for
+    deadline semantics on single jobs).
+    """
+
+    def __init__(self, num_workers: int, *,
+                 straggler_sleep: dict[int, float] | None = None,
+                 timeout: float = 60.0, plan=None):
+        self.num_workers = int(num_workers)
+        self.straggler_sleep = dict(straggler_sleep or {})
+        self.timeout = float(timeout)
+        self.ledger = FaultLedger()
+        plan = FaultPlan.coerce(plan)
+        for f in plan.faults:
+            if f.worker >= self.num_workers:
+                raise ValueError(f"fault {f.kind} targets worker {f.worker}, "
+                                 f"pool has {self.num_workers}")
+        self.injector = FaultInjector(plan, self.ledger)
+        self._ctx = multiprocessing.get_context("spawn")
+        self._conns: dict[int, object] = {}
+        self._procs: dict[int, object] = {}
+        self._pids: dict[int, int] = {}
+        self._crashed: set[int] = set()
+        self._epoch = 0
+
+    def start(self) -> None:
+        if self._procs:
+            return
+        self.ledger.t0 = time.perf_counter()
+        for w in range(self.num_workers):
+            master_end, worker_end = self._ctx.Pipe(duplex=True)
+            proc = self._ctx.Process(
+                target=_mux_worker_main,
+                args=(w, worker_end, self.straggler_sleep.get(w, 0.0)),
+                daemon=True, name=f"mux-proc-worker-{w}")
+            proc.start()
+            worker_end.close()
+            self._conns[w] = master_end
+            self._procs[w] = proc
+
+    def close(self) -> None:
+        self.injector.shutdown()
+        for w, conn in list(self._conns.items()):
+            if conn is not None:
+                try:
+                    conn.send(("stop",))
+                except (BrokenPipeError, OSError):
+                    pass
+        deadline = time.perf_counter() + 5.0
+        for w, proc in self._procs.items():
+            proc.join(timeout=max(0.1, deadline - time.perf_counter()))
+            if proc.is_alive():
+                proc.terminate()
+                proc.join(timeout=1.0)
+            if self._conns.get(w) is not None:
+                self._conns[w].close()
+                self._conns[w] = None
+        self._procs = {}
+
+    def job_done(self, jid: int) -> None:
+        for conn in self._conns.values():
+            if conn is None:
+                continue
+            try:
+                conn.send(("job_done", jid))
+            except (BrokenPipeError, OSError):
+                pass  # the recv loop will classify the EOF
+
+    def submit(self, chunkeds, jobs):
+        from repro.runtime.executor import _fair_worker_items
+
+        self._epoch += 1
+        jobrows = {}
+        for jid, job in jobs.items():
+            tasks_by_row = {t.worker: t for t in make_tasks(job.code.M)}
+            jobrows[jid] = (job, tasks_by_row, chunkeds[jid].num_chunks)
+        for w in range(self.num_workers):
+            conn = self._conns.get(w)
+            if conn is None:
+                continue
+            items = _fair_worker_items(chunkeds, w)
+            jobdata = {}
+            for jid in {jid for jid, _ in items}:
+                job, tasks_by_row, q = jobrows[jid]
+                row_chunks = {r: tasks_by_row[r].chunks(q)
+                              for r in job.code.worker_rows[w]}
+                jobdata[jid] = (row_chunks, job.A_blocks, job.B_blocks,
+                                job.n, q)
+            try:
+                conn.send(("batch", self._epoch, items, jobdata))
+            except (BrokenPipeError, OSError):
+                self._sever(w, None)
+        return self._events(self._epoch)
+
+    def _sever(self, w: int, proc_join: float | None = 0.5) -> None:
+        conn = self._conns.get(w)
+        if conn is not None:
+            conn.close()
+        self._conns[w] = None
+        if w not in self._crashed:
+            self._crashed.add(w)
+            proc = self._procs.get(w)
+            if proc is not None and proc_join is not None:
+                proc.join(timeout=proc_join)
+            self.ledger.record(
+                "crash_detected", w,
+                exitcode=proc.exitcode if proc is not None else None)
+
+    def _events(self, epoch: int):
+        t0 = time.perf_counter()
+        last_progress = t0
+        fins: set[int] = set()
+        while True:
+            conns = {conn: w for w, conn in self._conns.items()
+                     if conn is not None and w not in fins}
+            if not conns:
+                break
+            ready = mp_connection.wait(list(conns), timeout=_POLL)
+            for conn in ready:
+                w = conns[conn]
+                while self._conns.get(w) is not None and conn.poll():
+                    try:
+                        msg = conn.recv()
+                    except (EOFError, OSError):
+                        self._sever(w)
+                        break
+                    last_progress = time.perf_counter()
+                    tag = msg[0]
+                    if tag == "hello":
+                        self._pids[w] = msg[2]
+                        self.injector.on_spawn(w, msg[2])
+                    elif tag == "chunk":
+                        _, _, ep, jid, c, payload = msg
+                        if ep != epoch:  # cancelled leftovers of a past batch
+                            continue
+                        if self.injector.should_drop(w, c):
+                            continue
+                        self.injector.on_result(w, c)
+                        yield time.perf_counter() - t0, w, jid, c, payload
+                    elif tag == "fin" and msg[2] == epoch:
+                        fins.add(w)
+            if time.perf_counter() - last_progress > self.timeout:
+                raise _EventSourceDry(
+                    f"no worker result within {self.timeout:.1f}s and the "
+                    "collected chunks do not decode (hung or dead workers?)")
+        if self._crashed:
+            raise _EventSourceDry(
+                f"worker process(es) {sorted(self._crashed)} crashed")
+
+
 # ------------------------------- entry point --------------------------------
 
 def run_proc_job(

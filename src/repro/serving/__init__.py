@@ -1,0 +1,31 @@
+"""repro.serving: multi-tenant coded serving (DESIGN.md section 11).
+
+Scheduler and load generator are jax-free host logic and import eagerly;
+the engine (and serve_step) pull in jax, so they load lazily -- importing
+``repro.serving`` for scheduling/metrics never initializes a backend.
+"""
+
+from repro.serving.loadgen import ClosedLoopLoad, TenantSpec, poisson_trace
+from repro.serving.scheduler import (SLO, ContinuousBatcher, Request,
+                                     ServingMetrics, percentile)
+
+__all__ = [
+    "SLO", "Request", "ContinuousBatcher", "ServingMetrics", "percentile",
+    "TenantSpec", "poisson_trace", "ClosedLoopLoad",
+    "ServingEngine", "generate", "jitted_decode_step",
+]
+
+_LAZY = {
+    "ServingEngine": ("repro.serving.engine", "ServingEngine"),
+    "generate": ("repro.serving.serve_step", "generate"),
+    "jitted_decode_step": ("repro.serving.serve_step", "jitted_decode_step"),
+}
+
+
+def __getattr__(name):
+    try:
+        mod, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod), attr)

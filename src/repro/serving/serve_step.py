@@ -8,6 +8,7 @@ assignment.
 
 from __future__ import annotations
 
+import weakref
 from functools import partial
 
 import jax
@@ -35,6 +36,28 @@ def make_decode_step(model, temperature: float = 0.0):
     return decode_step
 
 
+# model -> {temperature: jitted decode step}.  Weak keys: a model going out
+# of scope must release its compiled executables, not pin them for the
+# process lifetime.
+_JITTED_DECODE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def jitted_decode_step(model, temperature: float = 0.0):
+    """The jitted ``make_decode_step``, cached per (model, temperature).
+
+    ``generate`` used to re-wrap ``jax.jit`` on every call, so every
+    generate paid jit's dispatch-cache miss on a fresh callable (and
+    re-traced after any cache eviction).  One jitted callable per (model,
+    temperature) means repeated generate calls -- the serving engine's
+    steady state -- reuse the same executable.
+    """
+    per_model = _JITTED_DECODE.setdefault(model, {})
+    key = float(temperature)
+    if key not in per_model:
+        per_model[key] = jax.jit(make_decode_step(model, temperature))
+    return per_model[key]
+
+
 def generate(model, params, prompt, *, steps: int, max_seq: int,
              temperature: float = 0.0, extras=None, rng=None,
              cache_dtype=jnp.bfloat16):
@@ -42,7 +65,7 @@ def generate(model, params, prompt, *, steps: int, max_seq: int,
     rng = rng if rng is not None else jax.random.key(0)
     logits, cache = model.prefill(params, prompt, extras=extras,
                                   max_seq=max_seq, cache_dtype=cache_dtype)
-    decode = jax.jit(make_decode_step(model, temperature))
+    decode = jitted_decode_step(model, temperature)
     tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
     out = [tok]
     for i in range(steps - 1):

@@ -148,4 +148,20 @@ def test_pack_cache_identity_keyed_lru():
     assert p3 is not p1
     np.testing.assert_array_equal(p3.vals, p1.vals)
     pack_cache.clear()
-    assert pack_cache.cache_stats() == {"entries": 0, "hits": 0, "misses": 0}
+    assert pack_cache.cache_stats() == {
+        "entries": 0, "hits": 0, "misses": 0, "evictions": 0}
+
+
+def test_pack_cache_eviction_counter():
+    rng = np.random.default_rng(5)
+    cache = pack_cache.PackCache(max_entries=2)
+    plan = make_plan(2, 2, num_workers=8, seed=0)
+    ells = [dense_to_block_ell(rng.standard_normal((32, 32)).astype(np.float32),
+                               block_size=8) for _ in range(3)]
+    for ell in ells:
+        cache.get_pack(ell, plan)
+    stats = cache.stats()
+    assert stats == {"entries": 2, "hits": 0, "misses": 3, "evictions": 1}
+    # the evicted (oldest) entry re-packs: a miss, not a stale hit
+    cache.get_pack(ells[0], plan)
+    assert cache.stats()["misses"] == 4 and cache.stats()["evictions"] == 2

@@ -1,3 +1,5 @@
+import math
+
 import numpy as np
 import pytest
 
@@ -5,8 +7,14 @@ import jax
 import jax.numpy as jnp
 
 import repro.configs as configs
+from repro.core import schemes
 from repro.models import build
-from repro.serving.serve_step import generate, make_decode_step, make_prefill_step
+from repro.runtime.executor import JobMux, MuxJob
+from repro.serving.loadgen import ClosedLoopLoad, TenantSpec, poisson_trace
+from repro.serving.scheduler import (SLO, ContinuousBatcher, Request,
+                                     ServingMetrics, percentile)
+from repro.serving.serve_step import (generate, jitted_decode_step,
+                                      make_decode_step, make_prefill_step)
 from repro.training.data import SyntheticCorpus, input_specs
 
 
@@ -53,3 +61,259 @@ def test_input_specs_cover_model_inputs(name, kind, extra):
         assert spec[extra].shape[0] == 4
     if kind == "train":
         assert spec["labels"].shape == (4, 64)
+
+
+def test_jitted_decode_step_is_cached_per_model_and_temperature():
+    cfg = configs.get("internlm2-1.8b").reduced()
+    model = build(cfg)
+    # the serving steady state: repeated lookups return the SAME jitted
+    # callable (generate used to re-wrap jax.jit every call)
+    d1 = jitted_decode_step(model, 0.0)
+    d2 = jitted_decode_step(model, 0.0)
+    assert d1 is d2
+    assert jitted_decode_step(model, 1.0) is not d1
+    other = build(cfg)
+    assert jitted_decode_step(other, 0.0) is not d1
+
+
+# ---------------------------- scheduler ------------------------------------
+
+
+def _req(rid, tenant, arrival=0.0, prompt_len=4, max_new=2, slo=None):
+    return Request(rid=rid, tenant=tenant, arrival_time=arrival,
+                   prompt_len=prompt_len, max_new_tokens=max_new,
+                   slo=slo or SLO())
+
+
+def test_batcher_never_exceeds_max_batch():
+    b = ContinuousBatcher(max_batch=2)
+    for i in range(5):
+        b.submit(_req(f"r{i}", "t"))
+    admitted = b.admit(now=0.0)
+    assert len(admitted) == 2 and len(b.running) == 2 and b.waiting == 3
+    # a retired slot is refilled on the next admit (continuous batching)
+    b.retire(admitted[0], now=1.0)
+    more = b.admit(now=1.0)
+    assert len(more) == 1 and len(b.running) == 2 and b.waiting == 2
+
+
+def test_batcher_fifo_within_tenant():
+    b = ContinuousBatcher(max_batch=1)
+    for i in range(4):
+        b.submit(_req(f"a{i}", "alpha"))
+    order = []
+    while b.waiting:
+        (req,) = b.admit(now=0.0)
+        order.append(req.rid)
+        b.retire(req, now=0.0)
+    assert order == ["a0", "a1", "a2", "a3"]
+
+
+def test_batcher_round_robin_across_tenants():
+    b = ContinuousBatcher(max_batch=1)
+    for i in range(2):
+        b.submit(_req(f"a{i}", "alpha"))
+        b.submit(_req(f"b{i}", "beta"))
+    order = []
+    while b.waiting:
+        (req,) = b.admit(now=0.0)
+        order.append(req.rid)
+        b.retire(req, now=0.0)
+    # rotation across tenants, FIFO within each
+    assert order == ["a0", "b0", "a1", "b1"]
+
+
+def test_slo_accounting_and_percentiles():
+    assert percentile([1.0, 2.0, 3.0, 4.0], 50) == pytest.approx(2.5)
+    assert percentile([5.0], 99) == 5.0
+    assert math.isnan(percentile([], 50))
+
+    m = ServingMetrics()
+    ok = _req("ok", "t", arrival=0.0, slo=SLO(ttft=1.0, per_token=1.0))
+    ok.first_token_time = 0.5
+    ok.finish_time = 2.0
+    ok.token_latencies = [0.2, 0.4]
+    ok.tokens = [1, 2, 3]
+    slow = _req("slow", "t", arrival=0.0, slo=SLO(ttft=1.0, per_token=0.1))
+    slow.first_token_time = 0.5
+    slow.finish_time = 2.0
+    slow.token_latencies = [0.2, 0.4]   # tpot 0.3 > 0.1 -> SLO miss
+    failed = _req("dead", "t")
+    failed.error = "worker gone"
+    failed.finish_time = 1.0
+    for r in (ok, slow, failed):
+        m.record(r)
+    s = m.summary()
+    assert s["requests"] == 3 and s["completed"] == 2 and s["failed"] == 1
+    # a failed request is an SLO miss, not a dropped sample
+    assert s["slo_attainment"] == pytest.approx(1 / 3)
+    assert s["token_p50_ms"] == pytest.approx(300.0)
+    assert s["ttft_p50_ms"] == pytest.approx(500.0)
+
+
+# ---------------------------- loadgen --------------------------------------
+
+
+def test_poisson_trace_deterministic_and_per_tenant_independent():
+    tenants = [TenantSpec("a", rate=20.0), TenantSpec("b", rate=10.0)]
+    t1 = poisson_trace(tenants, horizon=1.0, seed=3)
+    t2 = poisson_trace(tenants, horizon=1.0, seed=3)
+    assert [(r.rid, r.arrival_time) for r in t1] == \
+           [(r.rid, r.arrival_time) for r in t2]
+    assert all(t1[i].arrival_time <= t1[i + 1].arrival_time
+               for i in range(len(t1) - 1))
+    # adding a tenant must not perturb an existing tenant's arrivals
+    t3 = poisson_trace(tenants + [TenantSpec("c", rate=5.0)],
+                       horizon=1.0, seed=3)
+    assert [(r.rid, r.arrival_time) for r in t3 if r.tenant == "a"] == \
+           [(r.rid, r.arrival_time) for r in t1 if r.tenant == "a"]
+
+
+def test_closed_loop_keeps_concurrency():
+    tenants = [TenantSpec("a", rate=1.0, weight=2.0),
+               TenantSpec("b", rate=1.0, weight=1.0)]
+    load = ClosedLoopLoad(tenants, concurrency=3, total=7, seed=0)
+    wave = load.initial()
+    assert len(wave) == 3
+    assert sorted(r.tenant for r in wave) == ["a", "a", "b"]
+    issued = len(wave)
+    while True:
+        nxt = load.next_request(wave[0], now=1.0)
+        if nxt is None:
+            break
+        assert nxt.tenant == wave[0].tenant  # client keeps its tenant
+        issued += 1
+    assert issued == 7
+
+
+# ---------------------------- JobMux ---------------------------------------
+
+
+def _mux_jobs(n_jobs, num_workers, seed=0):
+    rng = np.random.default_rng(seed)
+    jobs, expected = [], []
+    for k in range(n_jobs):
+        m_s, n_s = 2, 2
+        A = rng.standard_normal((8, 4 * (k + 1)))
+        B = rng.standard_normal((8, 6))
+        A_blocks = np.array_split(A, m_s, axis=1)
+        B_blocks = np.array_split(B, n_s, axis=1)
+        code = schemes.sparse_code(m_s, n_s, num_workers, seed=k)
+        jobs.append(MuxJob(code=code, A_blocks=A_blocks, B_blocks=B_blocks,
+                           n=n_s, num_chunks=2, tag=f"job{k}"))
+        expected.append([A_blocks[i].T @ B_blocks[j]
+                         for i in range(m_s) for j in range(n_s)])
+    return jobs, expected
+
+
+def test_jobmux_three_concurrent_jobs_exact_decode_sim():
+    jobs, expected = _mux_jobs(3, num_workers=8)
+    mux = JobMux(8, source="sim")
+    results = mux.run(jobs)
+    assert len(results) == 3
+    for res, exp in zip(results, expected):
+        assert res.ok, res.error
+        assert res.report.decode_stats["concurrent_jobs"] == 3
+        for got, want in zip(res.report.blocks, exp):
+            np.testing.assert_allclose(np.asarray(got), want, rtol=1e-7,
+                                       atol=1e-9)
+
+
+def test_jobmux_live_pool_persists_across_batches():
+    jobs, expected = _mux_jobs(3, num_workers=6, seed=1)
+    with JobMux(6, source="live", straggler_sleep={0: 0.1},
+                timeout=10.0) as mux:
+        for _ in range(2):  # same pool, two batches
+            results = mux.run(jobs)
+            for res, exp in zip(results, expected):
+                assert res.ok, res.error
+                for got, want in zip(res.report.blocks, exp):
+                    np.testing.assert_allclose(np.asarray(got), want,
+                                               rtol=1e-7, atol=1e-9)
+
+
+def test_jobmux_failure_isolated_to_uncoded_job():
+    rng = np.random.default_rng(2)
+    A = rng.standard_normal((6, 4))
+    B = rng.standard_normal((6, 4))
+    A_blocks = np.array_split(A, 2, axis=1)
+    B_blocks = np.array_split(B, 2, axis=1)
+    uncoded = MuxJob(code=schemes.uncoded(2, 2), A_blocks=A_blocks,
+                     B_blocks=B_blocks, n=2, tag="uncoded")
+    coded = MuxJob(code=schemes.sparse_code(2, 2, 6, seed=3),
+                   A_blocks=A_blocks, B_blocks=B_blocks, n=2, tag="coded")
+    mux = JobMux(6, source="sim", dead_workers=(1,))
+    by_tag = {r.tag: r for r in mux.run([uncoded, coded])}
+    assert not by_tag["uncoded"].ok
+    assert "not decodable" in by_tag["uncoded"].error
+    assert by_tag["coded"].ok, by_tag["coded"].error
+
+
+def test_jobmux_reports_shared_pack_cache_stats():
+    jobs, _ = _mux_jobs(3, num_workers=8, seed=4)
+    res = JobMux(8, source="sim").run(jobs)[0]
+    pc = res.report.decode_stats["pack_cache"]
+    assert set(pc) == {"entries", "hits", "misses", "evictions"}
+
+
+# ---------------------------- engine ---------------------------------------
+
+
+def _moe_cfg():
+    return configs.get("qwen3-moe-30b-a3b").reduced()
+
+
+def _tiny_trace(max_new=2, n=3):
+    tenants = [TenantSpec("a", rate=60.0, prompt_len=5, max_new_tokens=max_new),
+               TenantSpec("b", rate=40.0, prompt_len=7, max_new_tokens=max_new)]
+    return poisson_trace(tenants, horizon=0.1, seed=9, max_requests=n)
+
+
+def test_engine_coded_uncoded_token_parity():
+    from repro.serving.engine import ServingEngine
+
+    toks = {}
+    for coded in (True, False):
+        eng = ServingEngine(_moe_cfg(), coded=coded, num_workers=6,
+                            source="sim", unit_block_time=1e-3, max_batch=2)
+        with eng:
+            metrics = eng.run(_tiny_trace())
+        assert all(r.completed for r in metrics.requests), [
+            (r.rid, r.error) for r in metrics.requests]
+        toks[coded] = {r.rid: r.tokens for r in metrics.requests}
+    # the code on the wire must not change the text
+    assert toks[True] == toks[False]
+
+
+def test_engine_coded_survives_dead_worker_uncoded_fails():
+    from repro.serving.engine import ServingEngine
+
+    outcomes = {}
+    for coded in (True, False):
+        eng = ServingEngine(_moe_cfg(), coded=coded, num_workers=6,
+                            source="sim", unit_block_time=1e-3,
+                            dead_workers=(0,), max_batch=2)
+        with eng:
+            metrics = eng.run(_tiny_trace())
+        outcomes[coded] = metrics
+    assert all(r.completed for r in outcomes[True].requests)
+    assert outcomes[True].summary()["straggler_recoveries"] >= 1
+    # worker 0 is inside the uncoded footprint: every request fails, and the
+    # failure is accounted as an SLO miss
+    assert all(not r.completed for r in outcomes[False].requests)
+    assert outcomes[False].summary()["slo_attainment"] == 0.0
+
+
+def test_engine_metrics_schema_and_ttft():
+    from repro.serving.engine import ServingEngine
+
+    eng = ServingEngine(_moe_cfg(), coded=True, num_workers=6, source="sim",
+                        unit_block_time=1e-3, max_batch=2)
+    with eng:
+        s = eng.run(_tiny_trace()).summary()
+    assert s["requests"] == 3 and s["completed"] == 3
+    assert set(s["by_tenant"]) <= {"a", "b"}
+    for key in ("ttft_p50_ms", "ttft_p95_ms", "token_p50_ms",
+                "token_p95_ms", "token_p99_ms"):
+        assert s[key] is not None and s[key] >= 0.0
+    assert s["tokens"] == 3 * 2
