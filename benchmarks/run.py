@@ -20,6 +20,7 @@ from benchmarks import (
     bench_coded_matmul,
     bench_decode,
     bench_density,
+    bench_kernels,
     bench_recovery,
     bench_serving,
 )
@@ -31,6 +32,7 @@ SUITES = {
     "components": bench_components,  # Fig 6
     "decode": bench_decode,          # Theorem 1
     "coded_matmul": bench_coded_matmul,  # SPMD integration
+    "kernel": bench_kernels,         # one-launch fused decode vs roofline
     "chaos": bench_chaos,            # process runtime vs simulator twin
     "serving": bench_serving,        # multi-tenant coded serving SLOs
 }

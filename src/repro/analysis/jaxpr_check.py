@@ -116,6 +116,108 @@ def assert_detector_sensitivity(max_degree: int, s: int, n: int, bt: int,
             "detector has lost sensitivity")
 
 
+# ----------------------- pass: one-launch decode epilogue --------------------
+
+def _iter_eqns_outside_kernels(jaxpr) -> Iterator:
+    """Like ``iter_eqns`` but does NOT descend into pallas_call bodies: the
+    decode combine living inside a kernel is exactly the fused epilogue the
+    one-launch contract wants, never an offender."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        if eqn.primitive.name == "pallas_call":
+            continue
+        for param in eqn.params.values():
+            for sub in _sub_jaxprs(param):
+                yield from _iter_eqns_outside_kernels(sub)
+
+
+#: primitives a staged-out-of-kernel decode combine can appear as: the
+#: broadcast multiply of the legacy epilogue or an explicit D @ C~ contraction
+_DECODE_PRIMS = ("mul", "dot_general", "broadcast_in_dim")
+
+
+def decode_contraction_offenders(jaxpr, mn: int, br: int) -> list[tuple[str, tuple]]:
+    """Equations OUTSIDE any kernel that build the decode-weighted stack: a
+    mul / dot_general / broadcast with a rank-3 ``(mn, br, *)`` output.  On
+    the one-launch path that stack may only be born inside the fused
+    kernel's epilogue, so any hit means a separate decode launch (and an
+    HBM round-trip of C~) regressed into the staged program.  ``mn == 1``
+    is skipped: a single-block decode is shape-indistinguishable from the
+    local product itself."""
+    if mn <= 1:
+        return []
+    return [
+        (eqn.primitive.name, tuple(v.aval.shape))
+        for eqn in _iter_eqns_outside_kernels(_closed(jaxpr))
+        if eqn.primitive.name in _DECODE_PRIMS
+        for v in eqn.outvars
+        if getattr(v.aval, "shape", None) is not None
+        and len(v.aval.shape) == 3
+        and v.aval.shape[0] == mn and v.aval.shape[1] == br
+    ]
+
+
+def fused_epilogue_launches(jaxpr, mn: int) -> list[tuple]:
+    """Output shapes of every pallas_call that emits the decode-fused stack
+    (rank-3, leading dim mn).  Empty means the program never ran the
+    one-launch kernel -- the epilogue contract is vacuous without it."""
+    out = []
+    for eqn in iter_eqns(_closed(jaxpr)):
+        if eqn.primitive.name != "pallas_call":
+            continue
+        for v in eqn.outvars:
+            shape = getattr(v.aval, "shape", None)
+            if shape is not None and len(shape) == 3 and shape[0] == mn:
+                out.append(tuple(shape))
+    return out
+
+
+def legacy_decode_combine(dvec, Ct):
+    """The OLD two-step epilogue (broadcast multiply of the decode column
+    against the local product) -- the decode detector's sensitivity probe,
+    never an execution path."""
+    return dvec[:, None, None] * Ct[None]
+
+
+def assert_decode_detector_sensitivity(mn: int, br: int, bt: int,
+                                       dtype=jnp.float32) -> None:
+    """Prove ``decode_contraction_offenders`` still flags the legacy
+    two-step combine (same blind-detector rationale as the stacked-gather
+    self-test)."""
+    dvec = jax.ShapeDtypeStruct((mn,), dtype)
+    Ct = jax.ShapeDtypeStruct((br, bt), dtype)
+    closed = jax.make_jaxpr(legacy_decode_combine)(dvec, Ct)
+    if not decode_contraction_offenders(closed, mn, br):
+        raise AssertionError(
+            "jaxpr walker failed to flag the legacy decode combine "
+            f"(mn={mn}, br={br}, bt={bt}): the one-launch-epilogue detector "
+            "has lost sensitivity")
+
+
+def verify_fused_epilogue(closed, *, mn: int, br: int, context: str) -> list[Finding]:
+    """The one-launch contract for a kernel-lane staged fused program: the
+    decode stack is born inside a pallas_call epilogue and nowhere else."""
+    path, line = _staging_anchor()
+
+    def finding(message):
+        return Finding(rule="one-launch-epilogue", severity=ERROR, path=path,
+                       line=line, message=f"{context}: {message}",
+                       layer="jaxpr")
+
+    out = []
+    offenders = decode_contraction_offenders(closed, mn, br)
+    if offenders:
+        out.append(finding(
+            f"separate decode contraction staged outside the kernel: "
+            f"{offenders[:3]} -- the decode combine must ride the fused "
+            "epilogue"))
+    if mn > 1 and not fused_epilogue_launches(closed, mn):
+        out.append(finding(
+            "no pallas_call emits the (mn, br, bt) decode-fused stack: the "
+            "one-launch kernel never ran"))
+    return out
+
+
 # --------------------------- pass: collective axes ---------------------------
 
 def _eqn_axis_names(eqn) -> tuple:
@@ -284,13 +386,20 @@ def run_jaxpr_checks(max_schemes: int | None = None) -> tuple[list[Finding], int
     findings: list[Finding] = []
     programs = 0
 
-    # detector self-test first: a blind detector must fail the run, not
+    # detector self-tests first: a blind detector must fail the run, not
     # silently bless it
     try:
         assert_detector_sensitivity(max_degree=6, s=32, n=2, bt=12)
     except AssertionError as exc:
         findings.append(Finding(
             rule="no-dense-materialization", severity=ERROR, path=path,
+            line=line, layer="jaxpr", message=str(exc)))
+        return findings, programs
+    try:
+        assert_decode_detector_sensitivity(mn=4, br=8, bt=12)
+    except AssertionError as exc:
+        findings.append(Finding(
+            rule="one-launch-epilogue", severity=ERROR, path=path,
             line=line, layer="jaxpr", message=str(exc)))
         return findings, programs
 
@@ -348,5 +457,28 @@ def run_jaxpr_checks(max_schemes: int | None = None) -> tuple[list[Finding], int
                                  else None),
                     context=(f"scheme={name} backend={backend} "
                              f"out_sharded={out_sharded}")))
+                programs += 1
+                if backend != "block_sparse" or out_sharded:
+                    continue
+                # one-launch contract: re-stage on the TPU kernel lane (the
+                # pallas_call appears in the trace regardless of the host
+                # platform; nothing executes) and prove the decode combine
+                # lives in the kernel epilogue, not as a separate launch
+                import os
+
+                prev = os.environ.get("REPRO_KERNEL_LANE")
+                os.environ["REPRO_KERNEL_LANE"] = "tpu"
+                try:
+                    closed_k = jax.make_jaxpr(
+                        lambda a, b: op.apply(a, b, **kw))(A, B)
+                finally:
+                    if prev is None:
+                        del os.environ["REPRO_KERNEL_LANE"]
+                    else:
+                        os.environ["REPRO_KERNEL_LANE"] = prev
+                findings.extend(verify_fused_epilogue(
+                    closed_k, mn=m * n, br=br,
+                    context=(f"scheme={name} backend={backend} "
+                             "lane=tpu")))
                 programs += 1
     return findings, programs

@@ -28,12 +28,26 @@ class CodedMatmulConfig:
     """How a coded matmul executes (not WHAT it computes -- that is the plan).
 
     scheme      -- code design name in the scheme registry
-    backend     -- local-compute strategy name in the backend registry
+    backend     -- local-compute strategy name in the backend registry;
+                   ``"auto"`` defers the block_sparse/dense_scan choice to
+                   the measured live-tile density of the packed operand
+                   (below ``auto_density_threshold`` -> block_sparse)
     block_size  -- tile edge for auto-packing A on pack-consuming backends
     out_sharded -- decode collective: False = replicated psum, True =
                    psum_scatter (each device reduces only its block shard)
     out_dtype   -- result dtype (any np.dtype spelling; normalized)
     axis_name   -- the mesh axis that plays the worker axis
+    compute_dtype -- tile dtype of the packed coded compute: "float32"
+                   (exact), "bfloat16", or "int8" (per-tile scales, folded
+                   into the coding weights at staging time).  Quantized
+                   dtypes are budgeted against the scheme's ``cond_warn``
+                   decode-conditioning declaration at construction:
+                   eps(dtype) * cond_warn must stay within the global
+                   budget, so an ill-conditioned scheme (e.g. ``product``)
+                   cannot silently run int8.
+    auto_density_threshold -- live-tile fraction above which ``"auto"``
+                   picks dense_scan (BENCH data: block_sparse wins clearly
+                   at <= 10% density, loses by ~30%)
     """
 
     scheme: str = "sparse_code"
@@ -42,6 +56,8 @@ class CodedMatmulConfig:
     out_sharded: bool = False
     out_dtype: str = "float32"
     axis_name: str = "model"
+    compute_dtype: str = "float32"
+    auto_density_threshold: float = 0.25
 
     def __post_init__(self):
         registry.get_scheme(self.scheme)           # raises with known names
@@ -50,6 +66,29 @@ class CodedMatmulConfig:
             raise ValueError(f"block_size must be >= 1, got {self.block_size}")
         if not self.axis_name:
             raise ValueError("axis_name must be a non-empty mesh axis name")
+        if not 0.0 <= self.auto_density_threshold <= 1.0:
+            raise ValueError(
+                "auto_density_threshold is a live-tile fraction in [0, 1], "
+                f"got {self.auto_density_threshold}")
+        if self.compute_dtype not in coded_backends.QUANT_EPS:
+            raise ValueError(
+                f"compute_dtype {self.compute_dtype!r} not in "
+                f"{sorted(coded_backends.QUANT_EPS)}")
+        if self.compute_dtype != "float32":
+            if not coded_backends.get_backend(self.backend).needs_pack:
+                raise ValueError(
+                    f"compute_dtype {self.compute_dtype!r} quantizes the "
+                    f"PACKED tiles; backend {self.backend!r} takes no pack "
+                    "-- use block_sparse (or auto)")
+            eps = coded_backends.QUANT_EPS[self.compute_dtype]
+            cond = registry.get_scheme(self.scheme).invariants.cond_warn
+            if eps * cond > coded_backends.QUANT_COND_BUDGET:
+                raise ValueError(
+                    f"scheme {self.scheme!r} declares decode conditioning "
+                    f"up to {cond:.0e}; {self.compute_dtype} tile rounding "
+                    f"(eps={eps:.1e}) could amplify to {eps * cond:.1e} "
+                    f"> budget {coded_backends.QUANT_COND_BUDGET:.0e} -- "
+                    "use float32 for this scheme")
         # normalize any dtype spelling (np.float32, "f4", jnp dtypes) to the
         # canonical name so configs stay hashable and comparable
         canonical = np.dtype(self.out_dtype).name

@@ -41,7 +41,7 @@ from repro.core.coded_matmul import (
     resolve_pack,
     stage_coded_matmul,
 )
-from repro.sparse.blocksparse import BlockELL
+from repro.sparse.blocksparse import BlockELL, dense_to_block_ell
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,14 +117,48 @@ class CodedOp:
     def pack_for(self, a_sparse: BlockELL, *, use_cache: bool = True) -> WorkerTilePack:
         """The worker tile pack of ``a_sparse`` under this op's design,
         memoized in the runtime pack cache (packs depend only on the task
-        table, so one pack serves every survivor rebind of this op)."""
+        table and the config's compute_dtype, so one pack serves every
+        survivor rebind of this op)."""
         if use_cache:
             from repro.runtime import pack_cache
 
-            return pack_cache.get_pack(a_sparse, self.base_plan)
+            return pack_cache.get_pack(a_sparse, self.base_plan,
+                                       compute_dtype=self.config.compute_dtype)
         from repro.core.coded_matmul import pack_worker_tiles
 
-        return pack_worker_tiles(a_sparse, self.base_plan)
+        return pack_worker_tiles(a_sparse, self.base_plan,
+                                 compute_dtype=self.config.compute_dtype)
+
+    def _auto_backend(self, A, a_sparse, pack, s: int):
+        """Resolve ``backend="auto"``: measure live-tile density, pick.
+
+        Returns ``(backend_name, density, a_sparse)`` -- the BlockELL is
+        passed back so a pack built from a concrete A is not rebuilt.
+        """
+        cfg = self.config
+        if a_sparse is not None:
+            frac = a_sparse.density()
+        elif pack is not None:
+            # dense-equivalent tile count of the pack: every live slot of
+            # every worker could touch all s/bs row-blocks of its stripe
+            degrees = np.count_nonzero(self.base_plan.weights, axis=1)
+            cbl = pack.vals.shape[1]
+            dense_eq = max(1, int(degrees.sum()) * cbl * (s // pack.block_size))
+            frac = float(np.asarray(pack.live_tiles).sum()) / dense_eq
+        else:
+            import jax
+
+            if isinstance(A, jax.core.Tracer):
+                raise ValueError(
+                    "backend='auto' under jit needs a_sparse= (a host "
+                    "BlockELL) or pack= to measure live-tile density: it "
+                    "cannot be derived from a traced operand")
+            a_sparse = dense_to_block_ell(np.asarray(A, dtype=np.float32),
+                                          block_size=cfg.block_size)
+            frac = a_sparse.density()
+        chosen = ("block_sparse" if frac <= cfg.auto_density_threshold
+                  else "dense_scan")
+        return chosen, frac, a_sparse
 
     def apply(self, A, B, *, a_sparse: BlockELL | None = None,
               pack: WorkerTilePack | None = None):
@@ -135,30 +169,41 @@ class CodedOp:
         pack cache) or ``pack`` (a prebuilt ``WorkerTilePack``); a concrete
         (non-traced) A is packed automatically with ``config.block_size``.
         Backends that take no pack reject these operands outright instead
-        of silently ignoring them.
+        of silently ignoring them.  ``backend="auto"`` measures the
+        operand's live-tile fraction against
+        ``config.auto_density_threshold`` and dispatches to block_sparse
+        (sparse enough) or dense_scan; the density inputs are consumed by
+        that decision and simply dropped when dense_scan wins.
         """
         if self.mesh is None:
             raise ValueError(
                 "unbound CodedOp: call .bind(mesh) (or .bind()) first")
         cfg = self.config
-        entry = coded_backends.get_backend(cfg.backend)
+        backend = cfg.backend
+        entry = coded_backends.get_backend(backend)
         if not entry.needs_pack and (a_sparse is not None or pack is not None):
             raise ValueError(
-                f"backend {cfg.backend!r} takes no a_sparse/pack operand")
+                f"backend {backend!r} takes no a_sparse/pack operand")
         N, s, r, _, br, _ = _check_operands(A, B, self.plan_, self.mesh,
                                             cfg.axis_name)
+        if entry.virtual:
+            backend, _, a_sparse = self._auto_backend(A, a_sparse, pack, s)
+            entry = coded_backends.get_backend(backend)
+            if not entry.needs_pack:
+                a_sparse = pack = None
         if entry.needs_pack:
             if pack is None and a_sparse is not None:
                 pack = self.pack_for(a_sparse)
             pack = resolve_pack(
                 A, self.base_plan, pack=pack, a_sparse=a_sparse,
-                block_size=cfg.block_size, num_workers=N, s=s, r=r, br=br)
+                block_size=cfg.block_size, compute_dtype=cfg.compute_dtype,
+                num_workers=N, s=s, r=r, br=br)
         return stage_coded_matmul(
             A, B, self.plan_, self.mesh,
             axis_name=cfg.axis_name,
             alive=self.survivors,
             out_dtype=cfg.np_dtype,
-            backend=cfg.backend,
+            backend=backend,
             pack=pack,
             out_sharded=cfg.out_sharded)
 

@@ -31,22 +31,50 @@ class Backend:
     (a ``WorkerTilePack``) that must be built outside jit.
     local_product_factory: attached by the implementing module; called as
     ``factory(plan, pack, bt) -> (k, A, B) -> (br, bt)`` at staging time.
+    fused_decode: the backend can fold the decode combine into its local
+    product's epilogue -- staging then calls ``fused_local_product_factory``
+    (``factory(plan, pack, bt) -> (k, A, B, dvec) -> (mn, br, bt)``) and the
+    separate ``D @ C~`` contraction never appears in the staged program.
+    virtual: a dispatch pseudo-backend (e.g. ``"auto"``) that the API layer
+    resolves to a concrete backend before staging; staging itself rejects it.
     """
 
     name: str
     needs_pack: bool = False
     doc: str = ""
     local_product_factory: Optional[Callable] = None
+    fused_decode: bool = False
+    fused_local_product_factory: Optional[Callable] = None
+    virtual: bool = False
+
+
+#: tile dtypes the pack layer can quantize coded compute to, with their
+#: worst-case RELATIVE per-element rounding error.  The config layer
+#: multiplies this by the scheme's declared decode conditioning
+#: (``cond_warn``) to accept or reject the pairing (DESIGN.md section 12);
+#: the pack layer (``pack_worker_tiles``) implements the quantization.
+QUANT_EPS = {
+    "float32": 0.0,
+    "bfloat16": 2.0 ** -8,   # 8 mantissa bits
+    "int8": 1.0 / 127.0,     # symmetric per-tile amax/127 grid
+}
+
+#: eps * cond_warn above this and decode may amplify tile rounding error
+#: past usable precision -- the config constructor rejects the pairing
+QUANT_COND_BUDGET = 1.0e6
 
 
 _REGISTRY: dict[str, Backend] = {}
 
 
-def register_backend(name: str, *, needs_pack: bool = False, doc: str = "") -> Backend:
+def register_backend(name: str, *, needs_pack: bool = False, doc: str = "",
+                     fused_decode: bool = False,
+                     virtual: bool = False) -> Backend:
     """Register (or return the existing entry for) a backend name."""
     if name in _REGISTRY:
         return _REGISTRY[name]
-    entry = Backend(name=name, needs_pack=needs_pack, doc=doc)
+    entry = Backend(name=name, needs_pack=needs_pack, doc=doc,
+                    fused_decode=fused_decode, virtual=virtual)
     _REGISTRY[name] = entry
     return entry
 
@@ -74,7 +102,14 @@ register_backend(
     doc="lax.scan of dense einsum block products over the padded task slots",
 )
 register_backend(
-    "block_sparse", needs_pack=True,
+    "block_sparse", needs_pack=True, fused_decode=True,
     doc="fused-gather Pallas SpMM over per-worker packed tiles of A "
-        "(compute and HBM traffic scale with live tiles)",
+        "(compute and HBM traffic scale with live tiles); the decode "
+        "combine rides in the kernel epilogue -- one launch, no D @ C~",
+)
+register_backend(
+    "auto", needs_pack=True, virtual=True,
+    doc="density-keyed dispatch: measures the operand's BlockELL live-tile "
+        "fraction and picks block_sparse below the configured threshold, "
+        "dense_scan above it (resolved by CodedOp before staging)",
 )

@@ -60,6 +60,7 @@ import warnings
 
 import jax
 import jax.numpy as jnp
+import ml_dtypes
 import numpy as np
 import scipy.sparse as sp
 from jax.sharding import PartitionSpec as P
@@ -312,6 +313,16 @@ class WorkerTilePack:
     local product gathers the *staged plan's* weight for each tile through
     it, so a chunk-masked plan (some slots zeroed by
     ``with_chunk_progress``) reuses the very same pack.
+
+    Quantized coded compute: with ``compute_dtype`` "bfloat16" the tile
+    values are stored rounded to bf16 (the kernels upcast to f32 for the
+    MXU accumulate); with "int8" each tile is symmetric-quantized with its
+    own scale ``amax(|tile|)/127`` recorded in ``tile_scale`` -- the scale
+    is folded into the per-tile weight at staging time (the kernels never
+    change), so dequantize cost is zero.  The coding weights are exact
+    either way; only the operand tiles carry rounding error, which the
+    config layer budgets against the scheme's ``cond_warn`` decode
+    conditioning (DESIGN.md section 12).
     """
 
     vals: np.ndarray
@@ -322,15 +333,32 @@ class WorkerTilePack:
     #: None only on packs from pre-chunking builders; the block_sparse
     #: factory REFUSES those (it cannot follow a chunk-masked plan's weights)
     slot_of: np.ndarray | None = None
+    compute_dtype: str = "float32"
+    #: (N, CBl, Lw) f32 per-tile dequant scale; None unless compute_dtype
+    #: is "int8"
+    tile_scale: np.ndarray | None = None
 
 
-def pack_worker_tiles(a_sparse: BlockELL, plan: CodedMatmulPlan) -> WorkerTilePack:
+# re-export: the canonical table lives in the jax-free backend registry so
+# the config layer can budget quantization without importing jax
+QUANT_EPS = coded_backends.QUANT_EPS
+
+
+def pack_worker_tiles(a_sparse: BlockELL, plan: CodedMatmulPlan,
+                      compute_dtype: str = "float32") -> WorkerTilePack:
     """Re-stripe A's global block-ELL into per-worker fused-gather tiles.
 
     Fully vectorized (bucketed NumPy, no Python loop over N x L x CB):
     entries are laid out slot-major (l ascending, then the BlockELL tile
     order within the slot), the same order the old nested loops produced.
+
+    ``compute_dtype`` quantizes the packed tile values ("bfloat16" rounds
+    in place, "int8" symmetric-quantizes with a per-tile scale recorded in
+    ``tile_scale``); coding weights and addresses stay exact f32/int32.
     """
+    if compute_dtype not in QUANT_EPS:
+        raise ValueError(
+            f"compute_dtype {compute_dtype!r} not in {sorted(QUANT_EPS)}")
     s, r = a_sparse.shape
     bs = a_sparse.block_size
     m, n = plan.m, plan.n
@@ -370,8 +398,17 @@ def pack_worker_tiles(a_sparse: BlockELL, plan: CodedMatmulPlan) -> WorkerTilePa
     wslot[kk, cc, dst] = plan.weights[kk, ll]
     slot_of[kk, cc, dst] = ll
     live = per_kcb.sum(axis=(1, 2)).astype(np.int64)
+
+    tile_scale = None
+    if compute_dtype == "bfloat16":
+        vals = vals.astype(ml_dtypes.bfloat16)
+    elif compute_dtype == "int8":
+        amax = np.abs(vals).max(axis=(-2, -1))              # (N, CBl, Lw)
+        tile_scale = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+        vals = np.rint(vals / tile_scale[..., None, None]).astype(np.int8)
     return WorkerTilePack(vals=vals, src=src, wslot=wslot, block_size=bs,
-                          live_tiles=live, slot_of=slot_of)
+                          live_tiles=live, slot_of=slot_of,
+                          compute_dtype=compute_dtype, tile_scale=tile_scale)
 
 
 # ------------------------------- entry point --------------------------------
@@ -389,6 +426,23 @@ def _largest_tile(bt: int, cap: int = 128) -> int:
     return 1
 
 
+def _plan_t_tiling(bt: int, cap: int = 128) -> tuple[int, int]:
+    """(t_tile, bt_pad) for the kernel grid over a bt-wide column group.
+
+    A ``bt`` whose only divisors <= cap are tiny (prime bt, or 2 * prime
+    beyond the cap) used to silently degrade toward t_tile=1 -- a
+    grid-per-element launch.  Instead the column group is zero-padded up to
+    the next multiple of 8 (the VPU sublane) that tiles well, and the
+    caller slices the pad columns back off; zero columns contribute
+    nothing, so the kept columns are bitwise unchanged.
+    """
+    t_tile = _largest_tile(bt, cap)
+    if t_tile >= min(bt, 8):
+        return t_tile, bt
+    bt_pad = -(-bt // 8) * 8
+    return _largest_tile(bt_pad, cap), bt_pad
+
+
 def _make_dense_scan_local_product(plan: CodedMatmulPlan, pack, bt: int):
     cols_t = jnp.asarray(plan.cols)        # (N, L)
     w_t = jnp.asarray(plan.weights)        # (N, L)
@@ -400,11 +454,13 @@ def _make_dense_scan_local_product(plan: CodedMatmulPlan, pack, bt: int):
     return local_product
 
 
-def _make_block_sparse_local_product(plan: CodedMatmulPlan, pack: WorkerTilePack,
-                                     bt: int):
+def _block_sparse_operands(plan: CodedMatmulPlan, pack: WorkerTilePack,
+                           bt: int):
+    """Shared staging of the block_sparse factories: device-resident pack
+    arrays, the slot-weight gather, and the (t_tile, bt_pad) grid plan."""
     vals_t = jnp.asarray(pack.vals)    # (N, CBl, Lw, bs, bs)
     src_t = jnp.asarray(pack.src)      # (N, CBl, Lw, 2)
-    t_tile = _largest_tile(bt)
+    t_tile, bt_pad = _plan_t_tiling(bt)
     if pack.slot_of is None:
         # a pack without the tile->slot map cannot follow a chunk-masked
         # plan's weights; computing with its baked-in base weights would be
@@ -423,20 +479,67 @@ def _make_block_sparse_local_product(plan: CodedMatmulPlan, pack: WorkerTilePack
     N_ = plan.weights.shape[0]
     wsl_all = jnp.where(
         live_t, w_cur[jnp.arange(N_)[:, None, None], sl_t], 0.0)
+    if pack.tile_scale is not None:
+        # int8 pack: fold the per-tile dequant scale into the per-tile
+        # weight -- w * (scale * tile_q) == (w * scale) * tile_q, and the
+        # kernels already multiply by the weight, so dequantize is free
+        wsl_all = wsl_all * jnp.asarray(pack.tile_scale)
+
+    def pad_cols(B_):
+        # zero-pad each bt-wide column group up to bt_pad (no-op pass-through
+        # when bt tiles fine); the kernel output is sliced back below
+        if bt_pad == bt:
+            return B_
+        s_, t_ = B_.shape
+        return jnp.pad(
+            B_.reshape(s_, t_ // bt, bt),
+            ((0, 0), (0, 0), (0, bt_pad - bt))).reshape(s_, -1)
+
+    return vals_t, src_t, wsl_all, t_tile, bt_pad, pad_cols
+
+
+def _make_block_sparse_local_product(plan: CodedMatmulPlan, pack: WorkerTilePack,
+                                     bt: int):
+    vals_t, src_t, wsl_all, t_tile, bt_pad, pad_cols = _block_sparse_operands(
+        plan, pack, bt)
 
     def local_product(k, A_, B_):
         # fused gather: tiles address the original B directly -- no
         # stacked (max_degree * s, bt) copy is ever materialized
-        return ops.spmm_block_fused(vals_t[k], src_t[k], wsl_all[k], B_,
-                                    bt=bt, t_tile=t_tile)
+        out = ops.spmm_block_fused(vals_t[k], src_t[k], wsl_all[k],
+                                   pad_cols(B_), bt=bt_pad, t_tile=t_tile)
+        return out[:, :bt] if bt_pad != bt else out
 
     return local_product
+
+
+def _make_block_sparse_fused_decode(plan: CodedMatmulPlan, pack: WorkerTilePack,
+                                    bt: int):
+    """The one-launch local product: decode combine fused into the epilogue.
+
+    Returns ``(k, A, B, dvec) -> (mn, br, bt)`` where dvec is this worker's
+    survivor decode column ``D[:, k] * alive_k``; the output is already the
+    stack of decode-weighted copies, ready for the psum -- the separate
+    ``D @ C~`` contraction never exists in the staged program.
+    """
+    vals_t, src_t, wsl_all, t_tile, bt_pad, pad_cols = _block_sparse_operands(
+        plan, pack, bt)
+
+    def local_product_decode(k, A_, B_, dvec):
+        out = ops.spmm_block_fused_decode(
+            vals_t[k], src_t[k], wsl_all[k], dvec, pad_cols(B_),
+            bt=bt_pad, t_tile=t_tile)
+        return out[:, :, :bt] if bt_pad != bt else out
+
+    return local_product_decode
 
 
 coded_backends.get_backend("dense_scan").local_product_factory = (
     _make_dense_scan_local_product)
 coded_backends.get_backend("block_sparse").local_product_factory = (
     _make_block_sparse_local_product)
+coded_backends.get_backend("block_sparse").fused_local_product_factory = (
+    _make_block_sparse_fused_decode)
 
 
 def _check_operands(A, B, plan: CodedMatmulPlan, mesh, axis_name: str):
@@ -459,6 +562,7 @@ def resolve_pack(
     pack: WorkerTilePack | None = None,
     a_sparse: BlockELL | None = None,
     block_size: int = 8,
+    compute_dtype: str = "float32",
     num_workers: int,
     s: int,
     r: int,
@@ -470,7 +574,9 @@ def resolve_pack(
     ``a_sparse`` host BlockELL of A (packed here), or a concrete A (packed
     with ``block_size``).  A pack built against different operands silently
     gathers garbage (XLA clamps out-of-range indices), so the result is
-    always validated against the operand geometry before use.
+    always validated against the operand geometry before use -- including
+    its ``compute_dtype``: a pack quantized differently than the config
+    asked for computes subtly different numbers.
     """
     n = plan.n
     if pack is None:
@@ -484,7 +590,11 @@ def resolve_pack(
             np.asarray(A, dtype=np.float32), block_size=block_size)
         if ell.shape != (s, r):
             raise ValueError(f"a_sparse shape {ell.shape} != A shape {(s, r)}")
-        pack = pack_worker_tiles(ell, plan)
+        pack = pack_worker_tiles(ell, plan, compute_dtype=compute_dtype)
+    if getattr(pack, "compute_dtype", "float32") != compute_dtype:
+        raise ValueError(
+            f"pack was quantized as {pack.compute_dtype!r} but the config "
+            f"asks for compute_dtype={compute_dtype!r}; rebuild the pack")
     if pack.vals.shape[0] != num_workers:
         raise ValueError(
             f"pack built for {pack.vals.shape[0]} workers, mesh has {num_workers}")
@@ -530,6 +640,10 @@ def stage_coded_matmul(
     coincidental.
     """
     entry = coded_backends.get_backend(backend)
+    if entry.virtual:
+        raise ValueError(
+            f"backend {backend!r} is a dispatch pseudo-backend: resolve it "
+            "to a concrete backend (CodedOp does this) before staging")
     N, s, r, t, br, bt = _check_operands(A, B, plan, mesh, axis_name)
     m, n = plan.m, plan.n
 
@@ -547,16 +661,26 @@ def stage_coded_matmul(
         raise ValueError(
             f"backend {backend!r} is registered but has no "
             "local_product_factory attached")
-    local_product = entry.local_product_factory(plan, pack, bt)
+    fuse = entry.fused_decode and entry.fused_local_product_factory is not None
+    if fuse:
+        local_product_decode = entry.fused_local_product_factory(plan, pack, bt)
+    else:
+        local_product = entry.local_product_factory(plan, pack, bt)
 
     mn = m * n
     mn_pad = -(-mn // N) * N  # scatter splits the block dim N ways
 
     def worker_fn(A_, B_):
         k = jax.lax.axis_index(axis_name)
-        Ct = local_product(k, A_, B_)
-        # decode contribution: blocks_c += D[c, k] * C~_k  (zeroed if dead)
-        contrib = (D_t[:, k] * alive_t[k])[:, None, None] * Ct[None]
+        if fuse:
+            # one-launch path: the decode combine happens in the kernel
+            # epilogue, so the (mn, br, bt) contribution comes out of the
+            # local product directly -- no D @ C~ contraction is staged
+            contrib = local_product_decode(k, A_, B_, D_t[:, k] * alive_t[k])
+        else:
+            Ct = local_product(k, A_, B_)
+            # decode contribution: blocks_c += D[c, k] * C~_k (zeroed if dead)
+            contrib = (D_t[:, k] * alive_t[k])[:, None, None] * Ct[None]
         if out_sharded:
             contrib = jnp.pad(contrib, ((0, mn_pad - mn), (0, 0), (0, 0)))
             # each device reduces only its 1/N shard of the block dim

@@ -25,10 +25,27 @@ Two entry points:
   it dispatches to an XLA gather/einsum path with identical semantics:
   the Pallas interpreter is a correctness tool, orders of magnitude
   slower than compiled XLA, and would bury the nnz-proportional win.
+* ``spmm_block_fused_decode`` -- the ONE-LAUNCH variant: the survivor
+  decode column d = D[:, k] * alive_k enters as a third scalar-prefetched
+  operand and the decode combine ``contrib[c] = d[c] * C~_k`` happens in
+  the kernel's epilogue -- the local product accumulates into a VMEM
+  scratch tile (double-buffered tile DMA exactly as in the fused kernel)
+  and on the last slot each of the mn decode-weighted copies is written
+  straight to the output block.  The separate ``D @ C~`` contraction (a
+  second launch plus an HBM round-trip of C~) disappears from the staged
+  program; ``repro.analysis.jaxpr_check.decode_contraction_offenders``
+  enforces its absence on the trace.
 
 Grid: (CB, t_tiles, L) -- L innermost so each (rb, tt) output tile stays
 VMEM-resident across its accumulation; zero-padded slots multiply zero tiles
 (fused: weight 0.0) and add nothing.
+
+Platform lanes: the decode-fused kernel exists on every backend.  TPU runs
+this module's compiled Pallas kernel; GPU runs the Pallas-Triton variant
+(``repro.kernels.spmm_block_triton``, in-kernel gather loop instead of
+index-map prefetch); CPU runs the XLA gather path (or either kernel under
+the interpreter for parity tests).  ``resolve_lane`` is the single policy:
+REPRO_KERNEL_LANE=tpu|triton|xla overrides, then the default backend picks.
 """
 
 from __future__ import annotations
@@ -222,3 +239,130 @@ def spmm_block_fused(vals, src, wslot, B, *, bt: int, t_tile: int = 128,
         return _spmm_block_fused_jnp(vals, src, wslot, B, bt=bt)
     return _spmm_block_fused_pallas(vals, src, wslot, B, bt=bt, t_tile=t_tile,
                                     interpret=resolve_interpret(interpret))
+
+
+# ------------------------- fused gather + decode ----------------------------
+
+#: the three implementations of the decode-fused local product, keyed by the
+#: name ``resolve_lane`` returns (the table itself lives in kernels.ops to
+#: avoid a circular import with the triton module)
+KERNEL_LANES = ("tpu", "triton", "xla")
+
+
+def resolve_lane(lane: str | None = None) -> str:
+    """The single platform-dispatch policy for the decode-fused kernel.
+
+    Explicit argument wins, then the REPRO_KERNEL_LANE env override, then
+    the REPRO_PALLAS_INTERPRET escape hatch (which historically forced the
+    Pallas path and keeps doing so: it forces the TPU-kernel lane, run
+    under the interpreter off-TPU), then the default backend: compiled
+    Pallas-TPU on TPU, Pallas-Triton on GPU, the XLA gather path on CPU.
+    """
+    if lane is not None:
+        if lane not in KERNEL_LANES:
+            raise ValueError(f"kernel lane {lane!r} not in {KERNEL_LANES}")
+        return lane
+    env = os.environ.get("REPRO_KERNEL_LANE")
+    if env:
+        if env not in KERNEL_LANES:
+            raise ValueError(
+                f"REPRO_KERNEL_LANE={env!r} not in {KERNEL_LANES}")
+        return env
+    pallas_env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if pallas_env is not None and pallas_env != "0":
+        return "tpu"
+    backend = jax.default_backend()
+    if backend == "tpu":
+        return "tpu"
+    if backend == "gpu":
+        return "triton"
+    return "xla"
+
+
+def _fused_decode_kernel(src_ref, w_ref, d_ref, vals_ref, b_ref, o_ref,
+                         acc_ref):
+    cb = pl.program_id(0)
+    l = pl.program_id(2)
+    nl = pl.num_programs(2)
+
+    @pl.when(l == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = w_ref[cb, l].astype(jnp.float32)        # per-slot code weight
+    tile = vals_ref[0, 0].astype(jnp.float32)   # (bs, bs) tile of A
+    b = b_ref[0].astype(jnp.float32)            # (bs, t_tile) rows of B
+    # C~[cb] += w * tile^T @ B[src_rb, :, src_jb-th column group] -- the
+    # SAME accumulation (order and all) as the two-step kernel, into VMEM
+    # scratch instead of the output ref
+    acc_ref[...] += w * jax.lax.dot_general(
+        tile, b, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(l == nl - 1)
+    def _epilogue():
+        # decode combine, fused: contrib[c] = d[c] * C~[cb] written per
+        # output block -- no separate D @ C~ launch, no HBM round-trip of
+        # C~.  mn is static (the output block's leading dim), so this is a
+        # compile-time loop of scalar-from-SMEM broadcasts.
+        acc = acc_ref[...]
+        for c in range(o_ref.shape[0]):
+            o_ref[c] = d_ref[c].astype(jnp.float32) * acc
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "t_tile", "interpret"))
+def _spmm_block_fused_decode_pallas(vals, src, wslot, dvec, B, *, bt: int,
+                                    t_tile: int = 128,
+                                    interpret: bool = False):
+    CB, L, bs, _ = vals.shape
+    s, t = B.shape
+    (mn,) = dvec.shape
+    if bt % t_tile:
+        raise ValueError(f"bt={bt} not divisible by t_tile={t_tile}")
+    if t % bt:
+        raise ValueError(f"t={t} not divisible by column-group width bt={bt}")
+    if s % bs:
+        raise ValueError(f"s={s} not divisible by block size {bs}")
+
+    grid = (CB, bt // t_tile, L)
+    tpg = bt // t_tile  # t_tiles per column group
+
+    vals_spec = pl.BlockSpec(
+        (1, 1, bs, bs), lambda cb, tt, l, src_ref, w_ref, d_ref: (cb, l, 0, 0)
+    )
+    b_spec = pl.BlockSpec(
+        (1, bs, t_tile),
+        lambda cb, tt, l, src_ref, w_ref, d_ref: (
+            src_ref[cb, l, 0], 0, src_ref[cb, l, 1] * tpg + tt),
+    )
+    o_spec = pl.BlockSpec(
+        (mn, bs, t_tile), lambda cb, tt, l, src_ref, w_ref, d_ref: (0, cb, tt)
+    )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[vals_spec, b_spec],
+        out_specs=o_spec,
+        scratch_shapes=[pltpu.VMEM((bs, t_tile), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _fused_decode_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mn, CB * bs, bt), jnp.float32),
+        interpret=interpret,
+    )(src.astype(jnp.int32), wslot.astype(jnp.float32),
+      dvec.astype(jnp.float32), vals, B.reshape(s // bs, bs, t))
+
+
+@functools.partial(jax.jit, static_argnames=("bt",))
+def _spmm_block_fused_decode_jnp(vals, src, wslot, dvec, B, *, bt: int):
+    """XLA lane of the decode-fused local product.
+
+    The local product is the fused-gather einsum, the decode combine the
+    broadcast multiply XLA fuses into it -- bit-identical to staging the
+    two steps separately (same ops in the same order), kept as the CPU
+    lane where compiled Pallas is unavailable.
+    """
+    out = _spmm_block_fused_jnp(vals, src, wslot, B, bt=bt)   # (CB*bs, bt)
+    return dvec.astype(jnp.float32)[:, None, None] * out[None]

@@ -1,0 +1,130 @@
+"""Pallas-Triton lane of the fused block-sparse kernels (GPU target).
+
+Same math as ``repro.kernels.spmm_block`` — C_k = sum_l w_l * tile_l^T @
+B[src_l] with the decode combine optionally fused into the epilogue — but
+restructured for the GPU grid model.  Triton grid axes are PARALLEL: there
+is no sequential innermost axis to accumulate across, so the slot loop
+moves INTO the kernel as a ``lax.fori_loop`` and the tile gather is an
+explicit ``pl.load`` with dynamic slices instead of a scalar-prefetched
+BlockSpec index_map.  One program instance owns one (row-block, column
+tile) output and walks its L packed slots, so the accumulator lives in
+registers and the output is written exactly once — decode-fused, each of
+the mn decode-weighted copies is written in the same epilogue with no HBM
+round-trip of C~.
+
+Compiled-lane caveat: Triton's ``tl.dot`` requires all matmul dimensions
+>= 16, so the compiled GPU lane needs block_size >= 16 (the repo default
+bs=8 still works under ``interpret=True``, which is what CPU parity tests
+and the CI gpu-lane job use).  Interpret mode executes the identical
+kernel body, loop structure and all.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _acc_slot(src_ref, w_ref, vals_ref, b_ref, cb, tt, l, acc, *,
+              bs: int, t_tile: int, tpg: int):
+    """acc += w[cb,l] * vals[cb,l]^T @ B[src row-block, src column tile]."""
+    rb = src_ref[cb, l, 0]
+    jb = src_ref[cb, l, 1]
+    w = w_ref[cb, l].astype(jnp.float32)
+    tile = pl.load(
+        vals_ref, (cb, l, pl.dslice(0, bs), pl.dslice(0, bs))
+    ).astype(jnp.float32)
+    b = pl.load(
+        b_ref, (rb, pl.dslice(0, bs), pl.dslice((jb * tpg + tt) * t_tile,
+                                                t_tile))
+    ).astype(jnp.float32)
+    return acc + w * jax.lax.dot_general(
+        tile, b, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def _fused_kernel_triton(src_ref, w_ref, vals_ref, b_ref, o_ref, *,
+                         bs: int, t_tile: int, num_slots: int, tpg: int):
+    cb = pl.program_id(0)
+    tt = pl.program_id(1)
+    acc = jax.lax.fori_loop(
+        0, num_slots,
+        lambda l, a: _acc_slot(src_ref, w_ref, vals_ref, b_ref, cb, tt, l, a,
+                               bs=bs, t_tile=t_tile, tpg=tpg),
+        jnp.zeros((bs, t_tile), jnp.float32),
+    )
+    pl.store(o_ref, (pl.dslice(cb * bs, bs), pl.dslice(tt * t_tile, t_tile)),
+             acc)
+
+
+def _fused_decode_kernel_triton(src_ref, w_ref, d_ref, vals_ref, b_ref, o_ref,
+                                *, bs: int, t_tile: int, num_slots: int,
+                                tpg: int, mn: int):
+    cb = pl.program_id(0)
+    tt = pl.program_id(1)
+    acc = jax.lax.fori_loop(
+        0, num_slots,
+        lambda l, a: _acc_slot(src_ref, w_ref, vals_ref, b_ref, cb, tt, l, a,
+                               bs=bs, t_tile=t_tile, tpg=tpg),
+        jnp.zeros((bs, t_tile), jnp.float32),
+    )
+    # fused decode epilogue: mn is static, so this unrolls into mn scalar
+    # broadcasts + stores of the register-resident accumulator
+    for c in range(mn):
+        pl.store(
+            o_ref,
+            (pl.dslice(c, 1), pl.dslice(cb * bs, bs),
+             pl.dslice(tt * t_tile, t_tile)),
+            (d_ref[c].astype(jnp.float32) * acc)[None],
+        )
+
+
+def _check_shapes(vals, B, bt, t_tile):
+    CB, L, bs, _ = vals.shape
+    s, t = B.shape
+    if bt % t_tile:
+        raise ValueError(f"bt={bt} not divisible by t_tile={t_tile}")
+    if t % bt:
+        raise ValueError(f"t={t} not divisible by column-group width bt={bt}")
+    if s % bs:
+        raise ValueError(f"s={s} not divisible by block size {bs}")
+    return CB, L, bs, s, t
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "t_tile", "interpret"))
+def spmm_block_fused_triton(vals, src, wslot, B, *, bt: int,
+                            t_tile: int = 128, interpret: bool = False):
+    """Triton lane of ``spmm_block_fused``: (CB*bs, bt) f32."""
+    CB, L, bs, s, t = _check_shapes(vals, B, bt, t_tile)
+    kernel = functools.partial(
+        _fused_kernel_triton, bs=bs, t_tile=t_tile, num_slots=L,
+        tpg=bt // t_tile)
+    return pl.pallas_call(
+        kernel,
+        grid=(CB, bt // t_tile),
+        out_shape=jax.ShapeDtypeStruct((CB * bs, bt), jnp.float32),
+        interpret=interpret,
+    )(src.astype(jnp.int32), wslot.astype(jnp.float32), vals,
+      B.reshape(s // bs, bs, t))
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "t_tile", "interpret"))
+def spmm_block_fused_decode_triton(vals, src, wslot, dvec, B, *, bt: int,
+                                   t_tile: int = 128,
+                                   interpret: bool = False):
+    """Triton lane of ``spmm_block_fused_decode``: (mn, CB*bs, bt) f32."""
+    CB, L, bs, s, t = _check_shapes(vals, B, bt, t_tile)
+    (mn,) = dvec.shape
+    kernel = functools.partial(
+        _fused_decode_kernel_triton, bs=bs, t_tile=t_tile, num_slots=L,
+        tpg=bt // t_tile, mn=mn)
+    return pl.pallas_call(
+        kernel,
+        grid=(CB, bt // t_tile),
+        out_shape=jax.ShapeDtypeStruct((mn, CB * bs, bt), jnp.float32),
+        interpret=interpret,
+    )(src.astype(jnp.int32), wslot.astype(jnp.float32),
+      dvec.astype(jnp.float32), vals, B.reshape(s // bs, bs, t))

@@ -32,27 +32,31 @@ _MAX_ENTRIES = 16
 
 
 class PackCache:
-    """Identity-keyed LRU of (BlockELL, plan) -> WorkerTilePack with counters."""
+    """Identity-keyed LRU of (BlockELL, plan, compute_dtype) -> WorkerTilePack."""
 
     def __init__(self, max_entries: int = _MAX_ENTRIES):
         self.max_entries = max_entries
         # key -> (ell, plan, pack): the refs pin the ids the key is built from
         self._cache: OrderedDict[
-            tuple[int, int], tuple[BlockELL, CodedMatmulPlan, WorkerTilePack]]
+            tuple[int, int, str],
+            tuple[BlockELL, CodedMatmulPlan, WorkerTilePack]]
         self._cache = OrderedDict()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
 
-    def get_pack(self, ell: BlockELL, plan: CodedMatmulPlan) -> WorkerTilePack:
-        """The pack for (ell, plan), computed at most once while both are alive."""
-        key = (id(ell), id(plan))
+    def get_pack(self, ell: BlockELL, plan: CodedMatmulPlan,
+                 compute_dtype: str = "float32") -> WorkerTilePack:
+        """The pack for (ell, plan), computed at most once while both are
+        alive.  compute_dtype is part of the key: an f32 pack and an int8
+        pack of the same operands are different artifacts."""
+        key = (id(ell), id(plan), compute_dtype)
         hit = self._cache.get(key)
         if hit is not None:
             self._cache.move_to_end(key)
             self.hits += 1
             return hit[2]
-        pack = pack_worker_tiles(ell, plan)
+        pack = pack_worker_tiles(ell, plan, compute_dtype=compute_dtype)
         self._cache[key] = (ell, plan, pack)
         if len(self._cache) > self.max_entries:
             self._cache.popitem(last=False)
@@ -75,8 +79,9 @@ class PackCache:
 GLOBAL = PackCache()
 
 
-def get_pack(ell: BlockELL, plan: CodedMatmulPlan) -> WorkerTilePack:
-    return GLOBAL.get_pack(ell, plan)
+def get_pack(ell: BlockELL, plan: CodedMatmulPlan,
+             compute_dtype: str = "float32") -> WorkerTilePack:
+    return GLOBAL.get_pack(ell, plan, compute_dtype=compute_dtype)
 
 
 def cache_stats() -> dict:

@@ -190,6 +190,59 @@ def check_old_new_parity(A, B, plan, mesh, ell):
                       f"out_sharded={out_sharded})")
 
 
+def check_fused_vs_two_step_schemes(mesh):
+    """One-launch acceptance matrix: the fused decode epilogue staged for
+    block_sparse must be BIT-identical (f32) to the legacy two-step decode
+    (local product, then the separate ``D @ C~`` combine) for every
+    registered scheme x {0, 1, 2 dead workers} x decode layout.  The
+    two-step reference is produced by the SAME op with the backend entry's
+    ``fused_decode`` flag toggled off -- everything else (plan, pack,
+    survivor mask, psum) identical."""
+    import dataclasses as _dc
+
+    from repro.coded import get_scheme, scheme_names
+    from repro.core import coded_backends
+
+    rng = np.random.default_rng(3)
+    m, n = 2, 2
+    s, r, t = 32, 8 * m, 12 * n
+    mask = rng.random((s // 8, r // 8)) < 0.5
+    A = jnp.asarray(rng.standard_normal((s, r))
+                    * np.kron(mask, np.ones((8, 8))), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((s, t)), jnp.float32)
+    ell = dense_to_block_ell(np.asarray(A, np.float32), block_size=8)
+    entry = coded_backends.get_backend("block_sparse")
+    for name in sorted(scheme_names()):
+        sch = get_scheme(name)
+        if name != "uncoded" and not sch.device_capable(m, n, 8):
+            continue
+        if name == "uncoded":
+            plan = sch.plan(m, n, None, seed=2)  # N == mn == 4
+            use_mesh = compat.make_mesh((4,), ("model",),
+                                        devices=jax.devices()[:4])
+            masks = [None]  # uncoded tolerates no dead workers
+        else:
+            plan = sch.plan(m, n, 8, seed=2)
+            use_mesh = mesh
+            masks = [None] + _kill_masks(plan, (1, 2))
+        for surv in masks:
+            n_dead = 0 if surv is None else int((~surv).sum())
+            for out_sharded in (False, True):
+                op = _op(plan, use_mesh, "block_sparse", out_sharded)
+                if surv is not None:
+                    op = op.with_survivors(surv)
+                C_fused = op.apply(A, B, a_sparse=ell)
+                entry.fused_decode = False
+                try:
+                    C_two = op.apply(A, B, a_sparse=ell)
+                finally:
+                    entry.fused_decode = True
+                assert np.array_equal(np.asarray(C_fused), np.asarray(C_two)), (
+                    f"fused epilogue != two-step decode (scheme={name}, "
+                    f"dead={n_dead}, out_sharded={out_sharded})")
+            print(f"  fused==two-step ok (scheme={name}, dead={n_dead})")
+
+
 def main():
     assert len(jax.devices()) == 8
     mesh = compat.make_mesh((8,), ("model",))
@@ -229,6 +282,7 @@ def main():
                 np.testing.assert_allclose(np.asarray(C2), np.asarray(C_ref),
                                            atol=5e-2, rtol=1e-3)
                 print(f"  survivor decode ok (killed worker {kill}, {backend})")
+    check_fused_vs_two_step_schemes(mesh)
     print("ALL-OK")
 
 

@@ -239,6 +239,152 @@ def test_old_new_bit_parity_single_device(backend, out_sharded):
     np.testing.assert_array_equal(np.asarray(C_new), np.asarray(C_old))
 
 
+# ----------------------- auto backend + quantization -------------------------
+
+def _density_ell(density, RB=16, CB=2, bs=8, seed=0):
+    """A BlockELL with a controlled live-tile fraction."""
+    rng = np.random.default_rng(seed)
+    mask = rng.random((RB, CB)) < density
+    mask[0, 0] = density > 0  # at least one live tile when density > 0
+    A = rng.standard_normal((RB * bs, CB * bs)) * np.kron(mask, np.ones((bs, bs)))
+    return A.astype(np.float32), dense_to_block_ell(A.astype(np.float32),
+                                                    block_size=bs)
+
+
+@pytest.mark.parametrize("density,expect", [
+    (0.02, "block_sparse"),   # 2%: far under the 0.25 default threshold
+    (0.30, "dense_scan"),     # 30%: above it
+])
+def test_auto_backend_picks_by_measured_density(density, expect):
+    p = make_plan(1, 1, num_workers=len(jax.devices()), max_degree=1, seed=3)
+    cfg = CodedMatmulConfig(backend="auto")
+    op = from_plan(cfg, p).bind(_mesh_1d())
+    A_np, ell = _density_ell(density)
+    assert abs(ell.density() - density) < 0.15
+    chosen, frac, _ = op._auto_backend(None, ell, None, A_np.shape[0])
+    assert chosen == expect and abs(frac - ell.density()) < 1e-9
+    # and end-to-end through apply: correct numbers either way
+    A = jnp.asarray(A_np)
+    B = jnp.asarray(np.random.default_rng(1).standard_normal(
+        (A_np.shape[0], 12)), jnp.float32)
+    C = op.apply(A, B, a_sparse=ell)
+    np.testing.assert_allclose(
+        np.asarray(C), np.asarray(uncoded_matmul_reference(A, B)),
+        atol=5e-2, rtol=1e-3)
+
+
+def test_auto_backend_threshold_is_configurable():
+    p = make_plan(1, 1, num_workers=len(jax.devices()), max_degree=1, seed=3)
+    _, ell = _density_ell(0.30)
+    mesh = _mesh_1d()
+    loose = from_plan(CodedMatmulConfig(backend="auto",
+                                        auto_density_threshold=0.9), p).bind(mesh)
+    assert loose._auto_backend(None, ell, None, 128)[0] == "block_sparse"
+    tight = from_plan(CodedMatmulConfig(backend="auto",
+                                        auto_density_threshold=0.01), p).bind(mesh)
+    assert tight._auto_backend(None, ell, None, 128)[0] == "dense_scan"
+    with pytest.raises(ValueError, match="auto_density_threshold"):
+        CodedMatmulConfig(backend="auto", auto_density_threshold=1.5)
+
+
+def test_auto_backend_concrete_A_and_tracer_rejection():
+    p = make_plan(1, 1, num_workers=len(jax.devices()), max_degree=1, seed=3)
+    op = from_plan(CodedMatmulConfig(backend="auto"), p).bind(_mesh_1d())
+    A_np, _ = _density_ell(0.02)
+    # concrete A: density measured by packing it on the spot
+    chosen, frac, ell = op._auto_backend(jnp.asarray(A_np), None, None,
+                                         A_np.shape[0])
+    assert chosen == "block_sparse" and ell is not None
+    # traced A with no density side-channel: loud error, not a silent guess
+    with pytest.raises(ValueError, match="auto.*under jit|jit needs"):
+        jax.jit(lambda a: op._auto_backend(a, None, None, 128))(
+            jnp.asarray(A_np))
+
+
+def test_auto_backend_is_virtual_everywhere_below_the_api():
+    from repro.core import coded_backends
+    from repro.core.coded_matmul import stage_coded_matmul
+
+    assert coded_backends.get_backend("auto").virtual
+    p = make_plan(1, 1, num_workers=len(jax.devices()), max_degree=1, seed=3)
+    A = jnp.zeros((8, 8), jnp.float32)
+    with pytest.raises(ValueError, match="pseudo-backend"):
+        stage_coded_matmul(A, A, p, _mesh_1d(), backend="auto")
+
+
+def test_compute_dtype_validation_and_cond_budget():
+    # unknown dtype and pack-free backend both rejected at construction
+    with pytest.raises(ValueError, match="compute_dtype"):
+        CodedMatmulConfig(compute_dtype="fp8")
+    with pytest.raises(ValueError, match="needs_pack|pack"):
+        CodedMatmulConfig(backend="dense_scan", compute_dtype="int8")
+    # sparse_code (cond_warn=1e8): eps * cond within the 1e6 budget
+    CodedMatmulConfig(scheme="sparse_code", backend="block_sparse",
+                      compute_dtype="int8")
+    CodedMatmulConfig(scheme="sparse_code", backend="block_sparse",
+                      compute_dtype="bfloat16")
+    # product (cond_warn=1e11): quantization noise can amplify past budget
+    for dt in ("int8", "bfloat16"):
+        with pytest.raises(ValueError, match="product.*budget|budget.*product"):
+            CodedMatmulConfig(scheme="product", backend="block_sparse",
+                              compute_dtype=dt)
+
+
+def test_quantized_pack_layout_and_cache_key():
+    from repro.core.coded_matmul import pack_worker_tiles
+    from repro.runtime import pack_cache
+
+    p = make_plan(1, 1, num_workers=len(jax.devices()), max_degree=1, seed=3)
+    A_np, ell = _density_ell(0.3, seed=5)
+    pk8 = pack_worker_tiles(ell, p, compute_dtype="int8")
+    assert pk8.vals.dtype == np.int8 and pk8.compute_dtype == "int8"
+    assert pk8.tile_scale is not None
+    assert pk8.tile_scale.shape == pk8.vals.shape[:-2]
+    pk32 = pack_worker_tiles(ell, p)
+    deq = pk8.vals.astype(np.float32) * pk8.tile_scale[..., None, None]
+    amax = np.abs(pk32.vals).max()
+    assert np.abs(deq - pk32.vals).max() <= amax / 127.0 + 1e-6
+    pkbf = pack_worker_tiles(ell, p, compute_dtype="bfloat16")
+    assert pkbf.vals.dtype.itemsize == 2 and pkbf.tile_scale is None
+    with pytest.raises(ValueError, match="compute_dtype"):
+        pack_worker_tiles(ell, p, compute_dtype="fp4")
+    # the runtime cache keys on dtype: same (ell, plan) pair, two entries
+    pack_cache.clear()
+    pack_cache.get_pack(ell, p)
+    pack_cache.get_pack(ell, p, compute_dtype="int8")
+    pack_cache.get_pack(ell, p, compute_dtype="int8")
+    st = pack_cache.cache_stats()
+    assert st["misses"] == 2 and st["hits"] == 1
+    pack_cache.clear()
+
+
+@pytest.mark.parametrize("dtype,tol", [("bfloat16", 2e-2), ("int8", 2e-2)])
+def test_quantized_coded_matmul_end_to_end(dtype, tol):
+    """Quantized block_sparse apply stays within the declared dtype
+    tolerance of the f32 result on well-conditioned data."""
+    p = make_plan(1, 1, num_workers=len(jax.devices()), max_degree=1, seed=3)
+    rng = np.random.default_rng(2)
+    A_np, ell = _density_ell(0.4, seed=2)
+    A = jnp.asarray(A_np)
+    B = jnp.asarray(rng.standard_normal((A_np.shape[0], 12)), jnp.float32)
+    mesh = _mesh_1d()
+    C32 = from_plan(CodedMatmulConfig(backend="block_sparse"), p).bind(
+        mesh).apply(A, B, a_sparse=ell)
+    Cq = from_plan(CodedMatmulConfig(backend="block_sparse",
+                                     compute_dtype=dtype), p).bind(
+        mesh).apply(A, B, a_sparse=ell)
+    scale = float(np.abs(np.asarray(C32)).max())
+    np.testing.assert_allclose(np.asarray(Cq), np.asarray(C32),
+                               atol=tol * scale, rtol=tol)
+    # a stale f32 pack is rejected when the config asks for int8
+    from repro.core.coded_matmul import pack_worker_tiles
+
+    with pytest.raises(ValueError, match="compute_dtype"):
+        from_plan(CodedMatmulConfig(backend="block_sparse",
+                                    compute_dtype=dtype), p).bind(mesh).apply(
+            A, B, pack=pack_worker_tiles(ell, p))
+
+
 # ------------------------------ package surface ------------------------------
 
 def test_top_level_exports():

@@ -145,7 +145,7 @@ def test_coded_matmul_rejects_unknown_backend():
     # reaches staging (and the registry snapshot still lists the builtins)
     with pytest.raises(ValueError, match="backend"):
         CodedMatmulConfig(backend="nope")
-    assert set(BACKENDS) == {"dense_scan", "block_sparse"}
+    assert set(BACKENDS) == {"dense_scan", "block_sparse", "auto"}
 
 
 def test_largest_tile_picks_biggest_divisor_capped():

@@ -221,6 +221,191 @@ def test_spmm_block_fused_matches_packed_coded_product():
         np.testing.assert_allclose(np.asarray(got), want, atol=1e-3, rtol=1e-3)
 
 
+# ----------------------- spmm_block_fused_decode ---------------------------
+#
+# The one-launch kernel: decode combine folded into the epilogue.  Parity is
+# defined PER LANE -- the fused kernel must be bit-identical to the two-step
+# composition (same-lane local product, then dvec[:, None, None] * C~[None])
+# because both run the identical accumulation order; across lanes only
+# allclose holds (einsum vs sequential slot accumulation reassociate).
+
+LANES = ["xla", "tpu", "triton"]
+
+
+def _fused_decode_case(seed=0, bs=8, CB=4, L=3, s=64, n=2, bt=128, mn=4):
+    rng = np.random.default_rng(seed)
+    vals, src, w, B = _random_fused_operands(rng, bs, CB, L, s, n, bt)
+    dvec = rng.standard_normal(mn).astype(np.float32)
+    return (jnp.asarray(vals), jnp.asarray(src), jnp.asarray(w),
+            jnp.asarray(dvec), jnp.asarray(B))
+
+
+@pytest.mark.parametrize("lane", LANES)
+def test_fused_decode_bitwise_vs_two_step_per_lane(lane):
+    vals, src, w, dvec, B = _fused_decode_case()
+    # the tpu lane's two-step reference must run the SAME Pallas kernel
+    # body (interpreted on this CPU box), not the XLA fallback the internal
+    # policy would pick off-TPU -- bitwise parity is per accumulation order
+    Ct = ops.spmm_block_fused(vals, src, w, B, bt=128, lane=lane,
+                              interpret=True if lane == "tpu" else None)
+    want = np.asarray(dvec)[:, None, None] * np.asarray(Ct)[None]
+    got = ops.spmm_block_fused_decode(vals, src, w, dvec, B, bt=128, lane=lane)
+    assert got.shape == (len(dvec), Ct.shape[0], Ct.shape[1])
+    np.testing.assert_array_equal(np.asarray(got), want,
+                                  err_msg=f"lane={lane} fused != two-step")
+
+
+@pytest.mark.parametrize("lane", LANES)
+def test_fused_decode_lanes_agree_allclose(lane):
+    vals, src, w, dvec, B = _fused_decode_case(seed=5)
+    ref = ops.spmm_block_fused_decode(vals, src, w, dvec, B, bt=128, lane="xla")
+    got = ops.spmm_block_fused_decode(vals, src, w, dvec, B, bt=128, lane=lane)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("bt,t_tile", [(24, 24), (40, 8)])
+def test_fused_decode_non_multiple_t_tile_shapes(bt, t_tile):
+    # bt not a multiple of 128: the tpu lane must still tile correctly
+    vals, src, w, dvec, B = _fused_decode_case(seed=9, s=32, n=3, bt=bt)
+    ref = ops.spmm_block_fused_decode(vals, src, w, dvec, B, bt=bt, lane="xla")
+    got = ops.spmm_block_fused_decode(vals, src, w, dvec, B, bt=bt,
+                                      t_tile=t_tile, lane="tpu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+    got_tr = ops.spmm_block_fused_decode(vals, src, w, dvec, B, bt=bt,
+                                         t_tile=t_tile, lane="triton")
+    np.testing.assert_allclose(np.asarray(got_tr), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_decode_dtype_sweep(dtype):
+    """bf16 tiles flow through every lane within bf16 tolerance of the f32
+    result (tiles are upcast to f32 inside the kernels; the error budget is
+    the bf16 storage rounding of vals, eps = 2**-8)."""
+    vals, src, w, dvec, B = _fused_decode_case(seed=13)
+    ref = np.asarray(ops.spmm_block_fused_decode(vals, src, w, dvec, B,
+                                                 bt=128, lane="xla"))
+    vq = vals.astype(dtype)
+    scale = float(np.abs(ref).max())
+    for lane in LANES:
+        got = ops.spmm_block_fused_decode(vq, src, w, dvec, B, bt=128,
+                                          lane=lane)
+        atol = 1e-6 if dtype == jnp.float32 else 2 ** -8 * 4 * scale
+        np.testing.assert_allclose(np.asarray(got), ref, atol=atol, rtol=2e-2)
+
+
+def test_fused_decode_survivor_rebind_pack():
+    """Over a real pack under a survivor rebind: the fused kernel fed the
+    rebound plan's gathered weights and decode column equals the dense
+    per-worker decode-weighted coded product."""
+    from repro.core.coded_matmul import make_plan, pack_worker_tiles
+
+    rng = np.random.default_rng(21)
+    plan = make_plan(2, 2, num_workers=8, seed=4)
+    surv = np.ones(8, dtype=bool)
+    surv[3] = False
+    rplan = plan.with_survivors(surv)
+    s, r, t, bs = 32, 32, 24, 8
+    m, n = 2, 2
+    br, bt = r // m, t // n
+    mask = rng.random((s // bs, r // bs)) < 0.6
+    A = rng.standard_normal((s, r)) * np.kron(mask, np.ones((bs, bs)))
+    B = rng.standard_normal((s, t)).astype(np.float32)
+    ell = dense_to_block_ell(A.astype(np.float32), block_size=bs)
+    pack = pack_worker_tiles(ell, plan)  # packs survive rebinds unchanged
+    for k in range(rplan.num_workers):
+        dcol = rplan.decode[:, k].astype(np.float32) * float(surv[k])
+        got = ops.spmm_block_fused_decode(
+            jnp.asarray(pack.vals[k]), jnp.asarray(pack.src[k]),
+            jnp.asarray(pack.wslot[k]), jnp.asarray(dcol), jnp.asarray(B),
+            bt=bt)
+        Ct = np.zeros((br, bt), np.float32)
+        for l in range(rplan.max_degree):
+            wgt = rplan.weights[k, l]
+            if wgt == 0.0:
+                continue
+            i, j = divmod(int(rplan.cols[k, l]), n)
+            Ct += wgt * (A[:, i * br:(i + 1) * br].T
+                         @ B[:, j * bt:(j + 1) * bt]).astype(np.float32)
+        want = dcol[:, None, None] * Ct[None]
+        np.testing.assert_allclose(np.asarray(got), want, atol=1e-3, rtol=1e-3)
+
+
+def test_resolve_lane_precedence(monkeypatch):
+    from repro.kernels.spmm_block import resolve_lane
+
+    monkeypatch.delenv("REPRO_KERNEL_LANE", raising=False)
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    assert jax.default_backend() not in ("tpu", "gpu")
+    assert resolve_lane() == "xla"                 # backend default on CPU
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert resolve_lane() == "tpu"                 # interpret opt-in
+    monkeypatch.setenv("REPRO_KERNEL_LANE", "triton")
+    assert resolve_lane() == "triton"              # env beats interpret
+    assert resolve_lane("xla") == "xla"            # explicit arg beats env
+    monkeypatch.setenv("REPRO_KERNEL_LANE", "cuda")
+    with pytest.raises(ValueError, match="cuda"):
+        resolve_lane()
+    with pytest.raises(ValueError, match="not in"):
+        resolve_lane("metal")
+
+
+def test_plan_t_tiling_prime_bt_pads():
+    """Regression: prime bt used to degrade to t_tile=1 (one grid step per
+    column).  Now the t axis pads to a multiple of 8 and tiles properly."""
+    from repro.core.coded_matmul import _plan_t_tiling
+
+    t_tile, bt_pad = _plan_t_tiling(13)            # small prime: one tile, fine
+    assert (t_tile, bt_pad) == (13, 13)
+    t_tile, bt_pad = _plan_t_tiling(128)           # no padding when aligned
+    assert (t_tile, bt_pad) == (128, 128)
+    t_tile, bt_pad = _plan_t_tiling(24)            # divisor exists: keep bt
+    assert bt_pad == 24 and 24 % t_tile == 0
+    t_tile, bt_pad = _plan_t_tiling(251)           # prime > cap: used to be 1
+    assert t_tile >= 8 and bt_pad % 8 == 0
+    assert bt_pad >= 251 and bt_pad % t_tile == 0
+    t_tile, bt_pad = _plan_t_tiling(2 * 127)       # 2*prime > cap: was 2
+    assert t_tile >= 8 and bt_pad >= 254 and bt_pad % t_tile == 0
+
+
+def test_fused_decode_prime_bt_end_to_end():
+    """The padded-t staging path: a per-worker coded product with prime
+    bt=251 (> the 128 tile cap, so the t axis genuinely pads to 256) must
+    match the dense reference after the pad+slice."""
+    from repro.core.coded_matmul import (
+        _make_block_sparse_fused_decode, make_plan, pack_worker_tiles)
+
+    rng = np.random.default_rng(17)
+    plan = make_plan(2, 2, num_workers=8, seed=4)
+    s, r, bs = 32, 16, 8
+    n, bt = 2, 251
+    t = n * bt
+    mask = rng.random((s // bs, r // bs)) < 0.7
+    A = (rng.standard_normal((s, r)) * np.kron(mask, np.ones((bs, bs)))
+         ).astype(np.float32)
+    B = jnp.asarray(rng.standard_normal((s, t)), jnp.float32)
+    ell = dense_to_block_ell(A, block_size=bs)
+    pack = pack_worker_tiles(ell, plan)
+    fused = _make_block_sparse_fused_decode(plan, pack, bt)
+    dvec = jnp.asarray(rng.standard_normal(4).astype(np.float32))
+    for k in [0, 3]:
+        got = np.asarray(fused(jnp.asarray(k), jnp.asarray(A), B, dvec))
+        assert got.shape == (4, r // 2, bt)
+        Ct = np.zeros((r // 2, bt), np.float32)
+        for l in range(plan.max_degree):
+            wgt = plan.weights[k, l]
+            if wgt == 0.0:
+                continue
+            i, j = divmod(int(plan.cols[k, l]), n)
+            Ct += wgt * (A[:, i * (r // 2):(i + 1) * (r // 2)].T
+                         @ np.asarray(B)[:, j * bt:(j + 1) * bt])
+        np.testing.assert_allclose(
+            got, np.asarray(dvec)[:, None, None] * Ct[None],
+            atol=1e-3, rtol=1e-3)
+
+
 # ------------------------- format round-trips ------------------------------
 
 if given is not None:
